@@ -1,0 +1,95 @@
+"""Paper Fig. 22 / §7.3: Q12 under different partitionings and plans.
+
+  default — inputs co-partitioned on the join key: no exchange.
+  Pa      — inputs partitioned off-key: shuffle BOTH tables to the join key.
+  Pb      — inputs partitioned off-key: broadcast the filtered lineitem side.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core import backend as B
+from repro.core.table import days
+from repro.data import tpch
+from repro.queries import QUERIES
+from repro.queries.q01_08 import _in
+
+from .common import emit, time_fn
+
+N = 8
+OFFKEY = {"lineitem": "l_partkey", "orders": "o_custkey"}
+
+
+def _filtered_lineitem(ctx):
+    l = ctx.scan("lineitem")
+    m = (ctx.isin(l, "l_shipmode", ["MAIL", "SHIP"]) &
+         (l["l_commitdate"] < l["l_receiptdate"]) &
+         (l["l_shipdate"] < l["l_commitdate"]) &
+         (l["l_receiptdate"] >= days("1994-01-01")) &
+         (l["l_receiptdate"] < days("1995-01-01")))
+    return ctx.select(ctx.filter(l, m), "l_orderkey", "l_shipmode")
+
+
+def _finish(ctx, j):
+    hi = [ctx.db.code("o_orderpriority", "1-URGENT"),
+          ctx.db.code("o_orderpriority", "2-HIGH")]
+    g = ctx.group_by(j, ["l_shipmode"], [
+        ("high_line_count", "sum",
+         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 1, 0)),
+        ("low_line_count", "sum",
+         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 0, 1)),
+    ], exchange="gather", final=True)
+    g = ctx.with_col(g, m_rank=lambda t: ctx.alpha_rank(t, "l_shipmode"))
+    return ctx.finalize(g, sort_keys=[("m_rank", True)], replicated=True)
+
+
+def q12_pa(ctx):
+    """Shuffle both sides to the join key (plan Pa)."""
+    ls = ctx.shuffle(_filtered_lineitem(ctx), "l_orderkey")
+    o = ctx.scan("orders")
+    os_ = ctx.shuffle(ctx.select(o, "o_orderkey", "o_orderpriority"),
+                      "o_orderkey")
+    j = ctx.join(ls, os_, "l_orderkey", "o_orderkey", ["o_orderpriority"])
+    return _finish(ctx, j)
+
+
+def q12_pb(ctx):
+    """Broadcast the (small) filtered lineitem side (plan Pb)."""
+    lb = ctx.broadcast(_filtered_lineitem(ctx))
+    o = ctx.scan("orders")
+    j = ctx.join(lb, o, "l_orderkey", "o_orderkey", ["o_orderpriority"])
+    return _finish(ctx, j)
+
+
+def main():
+    mesh = jax.make_mesh((N,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    db = tpch.generate(0.01, seed=11)
+    ref, _ = B.run_reference(QUERIES[12], db)
+
+    plans = [("default_copart", QUERIES[12], None),
+             ("pa_shuffle_both", q12_pa, OFFKEY),
+             ("pb_broadcast", q12_pb, OFFKEY)]
+    for name, fn, pk in plans:
+        def run():
+            out, stats, ov = B.run_distributed(fn, db, mesh,
+                                               capacity_factor=4.0,
+                                               partition_keys=pk)
+            assert not ov, name
+            return out, stats
+        out, stats = run()
+        for k in set(ref) & set(out):
+            np.testing.assert_allclose(np.asarray(out[k], np.float64),
+                                       np.asarray(ref[k], np.float64),
+                                       rtol=1e-7, err_msg=f"{name} {k}")
+        t = time_fn(lambda: run()[0], warmup=1, iters=3)
+        xbytes = sum(e.total_bytes for e in stats.log)
+        emit(f"q12_{name}", t * 1e6,
+             f"shuffles={stats.shuffles};broadcasts={stats.broadcasts};"
+             f"exchange_bytes={xbytes}")
+
+
+if __name__ == "__main__":
+    main()

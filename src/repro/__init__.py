@@ -1,0 +1,15 @@
+"""repro — distributed tensor query processing + multi-pod LM framework in JAX.
+
+Reproduction of "Terabyte-Scale Analytics in the Blink of an Eye" (distributed
+TQP on collective communication) adapted to TPU pods, plus the assigned
+LM-architecture zoo, training/serving substrate, and multi-pod launch tooling.
+
+x64 is enabled globally: SQL analytics needs real int64 keys (TPC-H SF>=1000
+orderkeys exceed int32).  All model code specifies dtypes explicitly, so LM
+paths remain bf16/f32/int32.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,68 @@
+"""Assigned architectures (exact public configs) + input-shape sets.
+
+Every (arch x shape) cell the dry-run must compile is enumerated by
+``iter_cells()``; pure full-attention archs skip long_500k (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import numpy as np
+
+from repro.models.common import ArchConfig
+
+ARCH_IDS = [
+    "mistral_nemo_12b", "phi3_mini_3_8b", "qwen1_5_110b", "gemma_7b",
+    "deepseek_v2_236b", "granite_moe_3b_a800m", "zamba2_1_2b",
+    "musicgen_large", "paligemma_3b", "rwkv6_3b",
+]
+
+# shape_id -> (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def input_specs(cfg: ArchConfig, shape_id: str, reduced: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    No allocation: the dry-run lowers against these.  ``reduced`` scales the
+    shapes down for smoke use."""
+    seq, batch, kind = SHAPES[shape_id]
+    if reduced:
+        seq, batch = min(seq, 128), min(batch, 2)
+    f = jax.ShapeDtypeStruct
+    i32 = np.int32
+    if kind == "train":
+        spec = {"tokens": f((batch, seq), i32), "labels": f((batch, seq), i32)}
+    elif kind == "prefill":
+        spec = {"tokens": f((batch, seq), i32)}
+    else:  # decode: one new token against a seq-long cache
+        spec = {"token": f((batch, 1), i32)}
+    if cfg.frontend == "vision_patches" and kind != "decode":
+        spec["patches"] = f((batch, cfg.n_prefix, cfg.d_model), np.float32)
+    return spec
+
+
+def cell_enabled(cfg: ArchConfig, shape_id: str) -> tuple[bool, str]:
+    if shape_id == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 524k decode skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def iter_cells():
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape_id in SHAPES:
+            ok, why = cell_enabled(cfg, shape_id)
+            yield arch_id, shape_id, ok, why

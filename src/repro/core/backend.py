@@ -1,0 +1,629 @@
+"""Execution backends for tensor query plans.
+
+Queries are written ONCE against the :class:`Context` API and run on three
+engines:
+
+  * :class:`RefContext`   — NumPy oracle / CPU baseline (exact shapes).
+  * :class:`LocalContext` — single-device JAX, static shapes, no exchanges.
+  * :class:`DistContext`  — SPMD under ``shard_map``; exchange operators are
+    real mesh collectives (the paper's distributed TQP model §2.4: every
+    process runs the same tensor program on its partition, no driver).
+
+Exchange placement is explicit in query code (``ctx.shuffle`` / ``ctx.broadcast``
+/ ``exchange=`` on group_by) — mirroring the paper's manually-optimized tensor
+programs (§4.4) — and is counted identically on every backend so plan statistics
+(paper Table 4) can be produced without a cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import exchange as ex
+from . import reference as ref
+from . import relational as rel
+from .table import Database, Table, from_numpy, to_numpy
+
+__all__ = [
+    "PlanStats", "RefContext", "LocalContext", "DistContext",
+    "run_reference", "run_local", "run_distributed",
+    "partition_database", "hash_partition_np",
+]
+
+AggSpec = Sequence[tuple]  # (out_name, op, col | callable | None)
+
+_YEAR_LUT = None
+
+
+def _year_lut() -> np.ndarray:
+    """epoch-day -> calendar year, for days 1970-01-01 .. 2005-12-31."""
+    global _YEAR_LUT
+    if _YEAR_LUT is None:
+        d = np.arange(0, 13150).astype("timedelta64[D]") + np.datetime64("1970-01-01")
+        _YEAR_LUT = d.astype("datetime64[Y]").astype(np.int64) + 1970
+    return _YEAR_LUT
+
+
+@dataclasses.dataclass
+class PlanStats:
+    shuffles: int = 0
+    broadcasts: int = 0
+    final_gathers: int = 0
+    allreduces: int = 0
+    overflow_checks: int = 0
+    log: list = dataclasses.field(default_factory=list)
+
+    def counts(self):
+        return {"shuffles": self.shuffles, "broadcasts": self.broadcasts,
+                "final_gathers": self.final_gathers, "allreduces": self.allreduces}
+
+
+def _eval_aggs(ctx, t, aggs):
+    """Materialize callable agg expressions into arrays."""
+    out = []
+    for name, op, v in aggs:
+        if callable(v):
+            v = v(t)
+        out.append((name, op, v))
+    return out
+
+
+def _expand_avg(aggs):
+    """avg -> (sum, count) pairs + postprocessing recipe."""
+    expanded, post = [], []
+    for name, op, v in aggs:
+        if op == "avg":
+            expanded.append((f"__{name}_s", "sum", v))
+            expanded.append((f"__{name}_c", "count", None))
+            post.append(name)
+        else:
+            expanded.append((name, op, v))
+    return expanded, post
+
+
+_MERGE = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+
+
+class _BaseContext:
+    """Shared bookkeeping + derived helpers."""
+
+    def __init__(self, db: Database, capacity_factor: float = 2.0):
+        self.db = db
+        self.dicts = db.dicts
+        self.stats = PlanStats()
+        self.capacity_factor = capacity_factor
+
+    # -- dictionary-encoded string predicates (TQP-style) ------------------
+    def str_lookup(self, col: str, pred: Callable[[np.ndarray], np.ndarray]):
+        """Host-evaluated predicate over dictionary -> per-row boolean."""
+        return self.db.dict_mask(col, pred)
+
+    def like(self, t, col: str, *substrings: str):
+        """col LIKE '%a%b%' -> ordered substring match on the dictionary."""
+        def pred(d):
+            m = np.ones(len(d), dtype=bool)
+            for i, s in enumerate(d):
+                pos = 0
+                ok = True
+                for sub in substrings:
+                    j = s.find(sub, pos)
+                    if j < 0:
+                        ok = False
+                        break
+                    pos = j + len(sub)
+                m[i] = ok
+            return m
+        lut = self.xp.asarray(self.str_lookup(col, pred))
+        return lut[t[col]]
+
+    def rename(self, t, mapping: dict):
+        if isinstance(t, dict):
+            return {mapping.get(k, k): v for k, v in t.items()}
+        return t.rename(mapping)
+
+    def starts_with(self, t, col: str, prefix: str):
+        lut = self.xp.asarray(self.str_lookup(
+            col, lambda d: np.char.startswith(d.astype(str), prefix)))
+        return lut[t[col]]
+
+    def ends_with(self, t, col: str, suffix: str):
+        lut = self.xp.asarray(self.str_lookup(
+            col, lambda d: np.char.endswith(d.astype(str), suffix)))
+        return lut[t[col]]
+
+    def alpha_rank(self, t, col: str):
+        """Alphabetical rank of a dictionary-encoded column (for ORDER BY on
+        strings: code order != lexicographic order)."""
+        d = self.dicts[col]
+        rank = np.empty(len(d), dtype=np.int64)
+        rank[np.argsort(d)] = np.arange(len(d))
+        return self.xp.asarray(rank)[t[col]]
+
+    _YEAR_BASE = 0  # epoch day 0
+
+    def year(self, t_or_col, col: str | None = None):
+        """Extract calendar year from an epoch-days column via a host LUT."""
+        v = t_or_col[col] if col is not None else t_or_col
+        lut = _year_lut()
+        return self.xp.asarray(lut)[v]
+
+    def isin(self, t, col: str, values: Sequence[str]):
+        codes = self.db.codes(col, values)
+        x = t[col]
+        m = self.xp.zeros(x.shape, dtype=bool)
+        for c in codes:
+            m = m | (x == c)
+        return m
+
+    def eq(self, t, col: str, value: str):
+        return t[col] == self.db.code(col, value)
+
+    # -- exchange bookkeeping ----------------------------------------------
+    def _count(self, kind: str, stats=None):
+        if kind == "shuffle":
+            self.stats.shuffles += 1
+        elif kind in ("broadcast", "broadcast_p2p"):
+            self.stats.broadcasts += 1
+        elif kind == "gather":
+            self.stats.final_gathers += 1
+        elif kind == "allreduce":
+            self.stats.allreduces += 1
+        if stats is not None:
+            self.stats.log.append(stats)
+
+
+# ===========================================================================
+# NumPy reference backend
+# ===========================================================================
+
+class RefContext(_BaseContext):
+    xp = np
+    distributed = False
+
+    def scan(self, name):
+        return dict(self.db.tables[name])  # RTable = dict of np arrays
+
+    def filter(self, t, mask):
+        return ref.filter_rows(t, np.asarray(mask))
+
+    def with_col(self, t, **exprs):
+        out = dict(t)
+        for k, fn in exprs.items():
+            out[k] = fn(t) if callable(fn) else fn
+        return out
+
+    def select(self, t, *names):
+        return {n: t[n] for n in names}
+
+    def _key(self, t, on):
+        if isinstance(on, str):
+            return t[on]
+        return ref.combine_keys([t[c] for c in on])
+
+    def join(self, probe, build, probe_on, build_on, take):
+        return ref.join_unique(probe, build, self._key(probe, probe_on),
+                               self._key(build, build_on), take)
+
+    def semi(self, probe, build, probe_on, build_on):
+        return ref.semi_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on))
+
+    def anti(self, probe, build, probe_on, build_on):
+        return ref.anti_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on))
+
+    def left(self, probe, build, probe_on, build_on, take, defaults):
+        return ref.left_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on), take, defaults)
+
+    def group_by(self, t, keys, aggs, exchange="local", final=False,
+                 groups_hint=None):
+        if exchange == "shuffle":
+            self._count("shuffle")
+        elif exchange == "gather":
+            self._count("gather" if final else "broadcast")
+        aggs, avg_post = _expand_avg(list(aggs))
+        out = ref.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        for name in avg_post:
+            out[name] = out[f"__{name}_s"] / np.maximum(out[f"__{name}_c"], 1)
+            del out[f"__{name}_s"], out[f"__{name}_c"]
+        return out
+
+    def agg_scalar(self, t, aggs):
+        self._count("allreduce")
+        aggs, avg_post = _expand_avg(list(aggs))
+        g = ref.group_aggregate(t, [], _eval_aggs(self, t, aggs))
+        out = {k: (v[0] if len(v) else np.asarray(0.0)) for k, v in g.items()}
+        for name in avg_post:
+            out[name] = out[f"__{name}_s"] / max(out[f"__{name}_c"], 1)
+            del out[f"__{name}_s"], out[f"__{name}_c"]
+        return out
+
+    def shuffle(self, t, key):
+        self._count("shuffle")
+        return t
+
+    def broadcast(self, t, p2p=False):
+        self._count("broadcast_p2p" if p2p else "broadcast")
+        return t
+
+    def shrink(self, t, cap):
+        self.stats.overflow_checks += 1
+        return t
+
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+        if not replicated:
+            self._count("gather")
+        if sort_keys:
+            t = ref.sort_by(t, sort_keys)
+        if limit is not None:
+            t = ref.limit(t, limit)
+        return t
+
+    def nrows(self, t):
+        return len(next(iter(t.values())))
+
+
+# ===========================================================================
+# Single-device JAX backend (static shapes, exchanges are identity)
+# ===========================================================================
+
+class LocalContext(_BaseContext):
+    xp = jnp
+    distributed = False
+
+    def __init__(self, db, tables: dict[str, Table], capacity_factor=2.0):
+        super().__init__(db, capacity_factor)
+        self._tables = tables
+        self.overflow = jnp.asarray(False)
+
+    def scan(self, name):
+        return self._tables[name]
+
+    def filter(self, t, mask):
+        return rel.filter_rows(t, mask)
+
+    def with_col(self, t, **exprs):
+        return t.replace(**{k: (fn(t) if callable(fn) else fn)
+                            for k, fn in exprs.items()})
+
+    def select(self, t, *names):
+        return t.select(*names)
+
+    def _key(self, t, on):
+        if isinstance(on, str):
+            return t[on]
+        return rel.combine_keys([t[c] for c in on])
+
+    def join(self, probe, build, probe_on, build_on, take):
+        return rel.join_unique(probe, build, self._key(probe, probe_on),
+                               self._key(build, build_on), take)
+
+    def semi(self, probe, build, probe_on, build_on):
+        return rel.semi_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on))
+
+    def anti(self, probe, build, probe_on, build_on):
+        return rel.anti_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on))
+
+    def left(self, probe, build, probe_on, build_on, take, defaults):
+        return rel.left_join(probe, build, self._key(probe, probe_on),
+                             self._key(build, build_on), take, defaults)
+
+    def group_by(self, t, keys, aggs, exchange="local", final=False,
+                 groups_hint=None):
+        if exchange == "shuffle":
+            self._count("shuffle")
+        elif exchange == "gather":
+            self._count("gather" if final else "broadcast")
+        aggs, avg_post = _expand_avg(list(aggs))
+        out = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        if groups_hint is not None:
+            out, ov = rel.static_shrink(out, min(out.capacity, groups_hint))
+            self.overflow = self.overflow | ov
+        for name in avg_post:
+            cnt = jnp.maximum(out[f"__{name}_c"], 1)
+            out = out.replace(**{name: out[f"__{name}_s"] / cnt})
+            out = out.drop(f"__{name}_s", f"__{name}_c")
+        return out
+
+    def agg_scalar(self, t, aggs):
+        self._count("allreduce")
+        aggs, avg_post = _expand_avg(list(aggs))
+        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs))
+        out = {name: g[name][0] for name in g.names}
+        for name in avg_post:
+            out[name] = out[f"__{name}_s"] / jnp.maximum(out[f"__{name}_c"], 1)
+            del out[f"__{name}_s"], out[f"__{name}_c"]
+        return out
+
+    def shuffle(self, t, key):
+        self._count("shuffle")
+        return t
+
+    def broadcast(self, t, p2p=False):
+        self._count("broadcast_p2p" if p2p else "broadcast")
+        return t
+
+    def shrink(self, t, cap):
+        self.stats.overflow_checks += 1
+        t, ov = rel.static_shrink(t, cap)
+        self.overflow = self.overflow | ov
+        return t
+
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+        if not replicated:
+            self._count("gather")
+        if sort_keys:
+            t = rel.sort_by(t, sort_keys)
+        if limit is not None:
+            t = rel.limit(t, limit)
+        return t
+
+    def nrows(self, t):
+        return t.count
+
+
+# ===========================================================================
+# Distributed backend (inside shard_map)
+# ===========================================================================
+
+class DistContext(LocalContext):
+    """SPMD execution: exchange calls become real collectives."""
+    distributed = True
+
+    def __init__(self, db, tables, axis_name: str, num_partitions: int,
+                 capacity_factor=2.0, packed_exchange=True):
+        super().__init__(db, tables, capacity_factor)
+        self.axis = axis_name
+        self.N = num_partitions
+        self.packed = packed_exchange
+
+    # -- exchanges ----------------------------------------------------------
+    def shuffle(self, t, key, dest_ids=None):
+        self._count("shuffle")
+        keyv = t[key] if isinstance(key, str) else self._key(t, key)
+        cap_per_dest = max(8, math.ceil(t.capacity * self.capacity_factor / self.N))
+        out, ov, _, stats = ex.shuffle(t, keyv, self.axis, self.N, cap_per_dest,
+                                       packed=self.packed, dest_ids=dest_ids)
+        self.stats.log.append(stats)
+        self.overflow = self.overflow | ov
+        return out
+
+    def broadcast(self, t, p2p=False):
+        self._count("broadcast_p2p" if p2p else "broadcast")
+        if p2p:
+            out, stats = ex.broadcast_table_p2p(t, self.axis, self.N)
+        else:
+            out, stats = ex.broadcast_table(t, self.axis, self.N, packed=self.packed)
+        self.stats.log.append(stats)
+        return out
+
+    # -- distributed aggregation --------------------------------------------
+    def group_by(self, t, keys, aggs, exchange="local", final=False,
+                 groups_hint=None):
+        """groups_hint: static bound on distinct groups (e.g. a dictionary
+        domain) — shrinks the partial aggregate BEFORE the exchange, so a
+        gather/shuffle of a wide scan's partial moves O(groups), not
+        O(scan capacity).  Overflow feeds the re-execution runner."""
+        aggs, avg_post = _expand_avg(list(aggs))
+        partial = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        if groups_hint is not None:
+            partial, ov = rel.static_shrink(
+                partial, min(partial.capacity, groups_hint))
+            self.overflow = self.overflow | ov
+        if exchange == "local":
+            out = partial
+        else:
+            merge = [(name, _MERGE[op], name) for name, op, _ in aggs]
+            if exchange == "shuffle":
+                self._count("shuffle")
+                keyv = rel.combine_keys([partial[k] for k in keys]) if len(keys) > 1 \
+                    else partial[keys[0]]
+                cap_per_dest = max(8, math.ceil(
+                    partial.capacity * self.capacity_factor / self.N))
+                moved, ov, _, stats = ex.shuffle(partial, keyv, self.axis, self.N,
+                                                 cap_per_dest, packed=self.packed)
+                self.stats.log.append(stats)
+                self.overflow = self.overflow | ov
+            elif exchange == "gather":
+                self._count("gather" if final else "broadcast")
+                moved, stats = ex.broadcast_table(partial, self.axis, self.N,
+                                                  packed=self.packed)
+                self.stats.log.append(stats)
+            else:
+                raise ValueError(exchange)
+            out = rel.group_aggregate(moved, keys, merge)
+        for name in avg_post:
+            cnt = jnp.maximum(out[f"__{name}_c"], 1)
+            out = out.replace(**{name: out[f"__{name}_s"] / cnt})
+            out = out.drop(f"__{name}_s", f"__{name}_c")
+        return out
+
+    def agg_scalar(self, t, aggs):
+        self._count("allreduce")
+        aggs, avg_post = _expand_avg(list(aggs))
+        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs))
+        partials = {name: g[name][0] for name in g.names}
+        ops = {name: _MERGE[op] for name, op, _ in aggs}
+        out = ex.partial_to_global(partials, ops, self.axis)
+        for name in avg_post:
+            out[name] = out[f"__{name}_s"] / jnp.maximum(out[f"__{name}_c"], 1)
+            del out[f"__{name}_s"], out[f"__{name}_c"]
+        return out
+
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+        """Final result collection: local order/limit, gather, global order.
+
+        ``replicated=True`` marks tables already merged on every device (e.g.
+        after group_by(exchange='gather')) — no further collection needed."""
+        if replicated:
+            if sort_keys:
+                t = rel.sort_by(t, sort_keys)
+            if limit is not None:
+                t = rel.limit(t, limit)
+            return t
+        self._count("gather")
+        if sort_keys:
+            t = rel.sort_by(t, sort_keys)
+        if limit is not None:
+            t = rel.limit(t, limit)   # local top-k before the gather
+        t, stats = ex.broadcast_table(t, self.axis, self.N, packed=self.packed)
+        self.stats.log.append(stats)
+        if sort_keys:
+            t = rel.sort_by(t, sort_keys)
+        if limit is not None:
+            t = rel.limit(t, limit)
+        return t
+
+
+# ===========================================================================
+# drivers
+# ===========================================================================
+
+def run_reference(query_fn, db: Database) -> tuple[dict, PlanStats]:
+    ctx = RefContext(db)
+    out = query_fn(ctx)
+    if isinstance(out, dict) and out and \
+            np.ndim(next(iter(out.values()))) == 0:
+        out = {k: np.asarray([v]) for k, v in out.items()}
+    return out, ctx.stats
+
+
+def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
+    out = {}
+    for name, t in db.tables.items():
+        n = len(next(iter(t.values())))
+        cap = max(8, int(math.ceil(n * pad / 8)) * 8)
+        out[name] = from_numpy(t, capacity=cap)
+    return out
+
+
+def run_local(query_fn, db: Database, jit: bool = True) -> tuple[dict, PlanStats]:
+    tables = _np_db_to_tables(db)
+    holder = {}
+
+    def run(tables):
+        ctx = LocalContext(db, tables)
+        out = query_fn(ctx)
+        holder["stats"] = ctx.stats
+        if isinstance(out, dict):
+            out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
+                        jnp.asarray(1, jnp.int32))
+        return out, ctx.overflow
+
+    fn = jax.jit(run) if jit else run
+    out, overflow = fn(tables)
+    assert not bool(overflow), "capacity overflow in local run"
+    return to_numpy(out), holder["stats"]
+
+
+# -- host-side partitioning (paper §4.3) ------------------------------------
+
+_C1 = np.uint64(0xFF51AFD7ED558CCD)
+_C2 = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+def hash_partition_np(key: np.ndarray, n: int) -> np.ndarray:
+    """splitmix64 finalizer — must match relational.hash_partition_ids."""
+    with np.errstate(over="ignore"):
+        k = key.astype(np.uint64)
+        k = (k ^ (k >> np.uint64(33))) * _C1
+        k = (k ^ (k >> np.uint64(33))) * _C2
+        k = k ^ (k >> np.uint64(33))
+        return (k % np.uint64(n)).astype(np.int32)
+
+
+# Paper §4.3: lineitem by l_orderkey (co-partitioned with orders), partsupp by
+# ps_partkey, others by primary key; nation/region replicated (tiny dims).
+PARTITION_KEYS = {
+    "lineitem": "l_orderkey",
+    "orders": "o_orderkey",
+    "partsupp": "ps_partkey",
+    "part": "p_partkey",
+    "supplier": "s_suppkey",
+    "customer": "c_custkey",
+    "nation": None,      # replicated
+    "region": None,      # replicated
+}
+
+
+def partition_database(db: Database, n: int,
+                       partition_keys: dict | None = None,
+                       ) -> tuple[dict[str, dict], dict[str, int]]:
+    """Host-side partitioning -> per-table (stacked shards dict, per-shard cap).
+
+    Returns columns shaped (n*cap,) and counts shaped (n,) ready for shard_map
+    with in_specs=P(axis).  Replicated tables (key None) appear whole in every
+    shard — the standard treatment for tiny dimension tables.
+    """
+    pk = dict(PARTITION_KEYS)
+    if partition_keys:
+        pk.update(partition_keys)
+    out, caps = {}, {}
+    for name, t in db.tables.items():
+        nrows = len(next(iter(t.values())))
+        key = pk.get(name)
+        if key is None:
+            shards = [t] * n
+        else:
+            dest = hash_partition_np(np.asarray(t[key]), n)
+            shards = [{k: v[dest == d] for k, v in t.items()} for d in range(n)]
+        cap = max(8, int(math.ceil(max(len(next(iter(s.values()))) for s in shards)
+                                   / 8)) * 8)
+        cols = {}
+        for cname in t:
+            stacked = np.zeros((n * cap,), dtype=t[cname].dtype)
+            for d, s in enumerate(shards):
+                stacked[d * cap: d * cap + len(s[cname])] = s[cname]
+            cols[cname] = stacked
+        cols["__count"] = np.array(
+            [len(next(iter(s.values()))) for s in shards], dtype=np.int32)
+        out[name] = cols
+        caps[name] = cap
+    return out, caps
+
+
+def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
+                    capacity_factor: float = 2.0, packed_exchange: bool = True,
+                    partition_keys: dict | None = None,
+                    ) -> tuple[dict, PlanStats, Any]:
+    """Run a query SPMD over ``mesh[axis]``; returns (result, stats, overflow).
+
+    One logical process per device, all executing the same tensor program —
+    the paper's MPI model realized as a single shard_map program.
+    """
+    n = mesh.shape[axis]
+    sharded, caps = partition_database(db, n, partition_keys)
+    holder = {}
+
+    def spmd(tree):
+        tables = {}
+        for name, cols in tree.items():
+            cnt = cols.pop("__count").reshape(())
+            tables[name] = Table(cols, cnt)
+        ctx = DistContext(db, tables, axis, n, capacity_factor, packed_exchange)
+        out = query_fn(ctx)
+        holder["stats"] = ctx.stats
+        if isinstance(out, dict):
+            out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
+                        jnp.asarray(1, jnp.int32))
+        return (Table(dict(out.columns), out.count.reshape(1)),
+                ctx.overflow.reshape(1))
+
+    inp = {name: {k: jnp.asarray(v) for k, v in cols.items()}
+           for name, cols in sharded.items()}
+    fn = jax.jit(jax.shard_map(spmd, mesh=mesh, in_specs=P(axis),
+                               out_specs=P(axis), check_vma=False))
+    out, overflow = fn(inp)
+    result = Table({k: v[: v.shape[0] // n] for k, v in out.columns.items()},
+                   out.count[0])
+    return to_numpy(result), holder["stats"], bool(np.any(np.asarray(overflow)))

@@ -1,0 +1,283 @@
+"""Data-exchange operators on JAX collectives — the paper's core contribution.
+
+GPU/NCCL -> TPU/XLA mapping (DESIGN.md §2):
+
+  shuffle    NCCL N^2 ncclSend/Recv (variable sizes)  ->  capacity-bounded
+             ``jax.lax.all_to_all`` with per-destination fixed-size row buffers
+             and validity counts (the MoE-dispatch idiom).  The pre-exchange
+             size-metadata round becomes an all_to_all of per-destination
+             counts, used for valid-row reconstruction, skew statistics, and
+             overflow-triggered re-execution.
+  broadcast  ncclBroadcast one-to-all ring             ->  ``jax.lax.all_gather``
+             (XLA lowers to the ICI ring — exactly the paper's Eq. 1 model).
+             A deliberately-naive p2p ring variant (``broadcast_table_p2p``)
+             reproduces §7.1 / Figure 19.
+  allreduce  ncclAllReduce                             ->  ``jax.lax.psum`` etc.
+
+Columns are exchanged either one at a time (paper-faithful, §2.3 "we exchange
+one column at a time") or packed into a single 32-bit-word buffer so the whole
+table moves in ONE collective (beyond-paper optimization; the paper's own
+Hockney model §3.6 predicts the win for small messages).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import Table
+from .relational import compact, hash_partition_ids
+
+__all__ = [
+    "ExchangeStats",
+    "pack_columns",
+    "unpack_columns",
+    "shuffle",
+    "broadcast_table",
+    "broadcast_table_p2p",
+    "partial_to_global",
+]
+
+
+@dataclasses.dataclass
+class ExchangeStats:
+    """Static (trace-time) descriptor of one exchange — feeds the perf models."""
+    kind: str                 # "shuffle" | "broadcast" | "broadcast_p2p" | "gather"
+    participants: int         # N
+    message_bytes: int        # per p2p message (shuffle) / per-shard payload (bcast)
+    total_bytes: int          # bytes leaving each device
+    collectives: int          # number of collective ops issued
+
+
+# ---------------------------------------------------------------------------
+# column packing
+# ---------------------------------------------------------------------------
+
+def _words(dt) -> int:
+    return max(1, np.dtype(dt).itemsize // 4)
+
+
+def pack_columns(t: Table) -> tuple[jax.Array, list[tuple[str, np.dtype, int]]]:
+    """Table columns -> (capacity, total_words) int32 buffer + unpack spec."""
+    bufs, spec = [], []
+    for name in t.names:
+        v = t[name]
+        if v.dtype == jnp.bool_:
+            v = v.astype(jnp.int32)
+        w = _words(v.dtype)
+        part = jax.lax.bitcast_convert_type(v, jnp.int32)
+        if part.ndim == 1:
+            part = part[:, None]
+        bufs.append(part)
+        spec.append((name, np.dtype(t[name].dtype), w))
+    return jnp.concatenate(bufs, axis=1), spec
+
+
+def unpack_columns(buf: jax.Array, spec) -> dict[str, jax.Array]:
+    cols, off = {}, 0
+    for name, dt, w in spec:
+        part = buf[:, off:off + w]
+        if dt == np.bool_:
+            cols[name] = part[:, 0].astype(jnp.bool_)
+        elif w == 1:
+            cols[name] = jax.lax.bitcast_convert_type(part[:, 0], dt)
+        else:
+            cols[name] = jax.lax.bitcast_convert_type(part, dt)
+        off += w
+    return cols
+
+
+# ---------------------------------------------------------------------------
+# shuffle
+# ---------------------------------------------------------------------------
+
+def _dispatch_offsets(dest: jax.Array, num_partitions: int, cap: int):
+    """Per-row (destination, slot) for capacity-bounded dispatch.
+
+    Returns (slot, counts): ``slot[i]`` is row i's index within its destination
+    bucket, ``counts[d]`` the number of rows headed to d.  Rows are ranked by a
+    stable sort on destination (TPU-native; no atomics).
+    """
+    order = jnp.argsort(dest, stable=True)            # rows grouped by dest
+    sorted_dest = dest[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(dest, dtype=jnp.int32),
+                                 dest, num_segments=num_partitions + 1)[:num_partitions]
+    start = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             jnp.cumsum(counts, dtype=jnp.int32)])
+    pos_in_group = jnp.arange(cap, dtype=jnp.int32) - start[jnp.minimum(sorted_dest, num_partitions)]
+    slot = jnp.zeros(cap, jnp.int32).at[order].set(pos_in_group)
+    return slot, counts
+
+
+def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
+            cap_per_dest: int, packed: bool = True,
+            dest_ids: jax.Array | None = None,
+            ) -> tuple[Table, jax.Array, jax.Array, ExchangeStats]:
+    """Repartition ``t`` by ``hash(key) % N`` across the mesh axis.
+
+    Returns (table, overflowed, per-sender recv counts, stats).  The output
+    table has capacity ``N * cap_per_dest``; ``overflowed`` is True on any
+    device whose bucket exceeded ``cap_per_dest`` (rows are dropped — the
+    fault-tolerant runner re-executes with a larger capacity factor, the
+    static-shape analogue of re-allocating NCCL receive buffers).
+    """
+    N, cap = num_partitions, t.capacity
+    dest = jnp.where(t.valid_mask(),
+                     hash_partition_ids(key, N) if dest_ids is None else dest_ids,
+                     N)  # padding rows -> virtual bucket N (dropped)
+    slot, counts = _dispatch_offsets(dest, N, cap)
+    overflow = jnp.any(counts > cap_per_dest)
+
+    flat_idx = dest * cap_per_dest + jnp.minimum(slot, cap_per_dest - 1)
+    keep = (slot < cap_per_dest) & (dest < N)
+    flat_idx = jnp.where(keep, flat_idx, N * cap_per_dest)  # OOB -> dropped
+
+    # metadata round: who sends me how much (the paper's size exchange)
+    recv_counts = jax.lax.all_to_all(
+        jnp.minimum(counts, cap_per_dest).reshape(N, 1), axis_name, 0, 0)[:, 0]
+
+    def _exchange(col2d: jax.Array) -> jax.Array:
+        send = jnp.zeros((N * cap_per_dest, col2d.shape[1]), col2d.dtype) \
+            .at[flat_idx].set(col2d, mode="drop") \
+            .reshape(N, cap_per_dest, col2d.shape[1])
+        return jax.lax.all_to_all(send, axis_name, 0, 0).reshape(
+            N * cap_per_dest, col2d.shape[1])
+
+    if packed:
+        buf, spec = pack_columns(t)
+        recv = _exchange(buf)
+        cols = unpack_columns(recv, spec)
+        n_coll = 1
+        words = buf.shape[1]
+    else:  # paper-faithful: one collective per column
+        cols = {}
+        words = 0
+        for name in t.names:
+            v = t[name]
+            if v.dtype == jnp.bool_:
+                v = v.astype(jnp.int32)
+            part = jax.lax.bitcast_convert_type(v, jnp.int32)
+            if part.ndim == 1:
+                part = part[:, None]
+            got = _exchange(part)
+            cols[name] = _unbitcast(got, t[name].dtype)
+            words += part.shape[1]
+        n_coll = len(t.names)
+
+    valid = (jnp.arange(N * cap_per_dest) % cap_per_dest) < \
+        jnp.repeat(recv_counts, cap_per_dest)
+    out = compact(Table(cols, jnp.asarray(N * cap_per_dest, jnp.int32)), valid)
+
+    stats = ExchangeStats(
+        kind="shuffle", participants=N,
+        message_bytes=cap_per_dest * words * 4,
+        total_bytes=N * cap_per_dest * words * 4,
+        collectives=n_coll + 1,  # +1 metadata round
+    )
+    return out, overflow, recv_counts, stats
+
+
+def _unbitcast(part: jax.Array, dt) -> jax.Array:
+    if dt == jnp.bool_:
+        return part[:, 0].astype(jnp.bool_)
+    if part.shape[1] == 1:
+        return jax.lax.bitcast_convert_type(part[:, 0], dt)
+    return jax.lax.bitcast_convert_type(part, dt)
+
+
+# ---------------------------------------------------------------------------
+# broadcast
+# ---------------------------------------------------------------------------
+
+def broadcast_table(t: Table, axis_name: str, num_partitions: int,
+                    packed: bool = True) -> tuple[Table, ExchangeStats]:
+    """Replicate a distributed table on every device (paper Fig. 3).
+
+    all_gather == the ring broadcast of Eq. 1 on the ICI torus: every device
+    streams its shard around the ring; N-1 hops of S/N bytes each.
+    """
+    N, cap = num_partitions, t.capacity
+    counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
+    if packed:
+        buf, spec = pack_columns(t)
+        recv = jax.lax.all_gather(buf, axis_name, tiled=True)
+        cols = unpack_columns(recv, spec)
+        n_coll, words = 1, buf.shape[1]
+    else:
+        cols, words = {}, 0
+        for name in t.names:
+            v = t[name]
+            if v.dtype == jnp.bool_:
+                v = v.astype(jnp.int32)
+            part = jax.lax.bitcast_convert_type(v, jnp.int32)
+            if part.ndim == 1:
+                part = part[:, None]
+            got = jax.lax.all_gather(part, axis_name, tiled=True)
+            cols[name] = _unbitcast(got, t[name].dtype)
+            words += part.shape[1]
+        n_coll = len(t.names)
+
+    valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
+    out = compact(Table(cols, jnp.asarray(N * cap, jnp.int32)), valid)
+    stats = ExchangeStats(kind="broadcast", participants=N,
+                          message_bytes=cap * words * 4,
+                          total_bytes=cap * words * 4 * (N - 1),
+                          collectives=n_coll + 1)
+    return out, stats
+
+
+def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
+                        ) -> tuple[Table, ExchangeStats]:
+    """§7.1 baseline: emulate broadcast with N-1 p2p ring forwards of the FULL
+    buffer — each shard transits every link once per hop instead of being
+    pipelined, duplicating inter-node traffic exactly as the paper describes.
+    Shows up in HLO as N-1 collective-permutes of the full shard."""
+    N, cap = num_partitions, t.capacity
+    buf, spec = pack_columns(t)
+    counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
+    parts = [buf]
+    cnt_parts = [t.count.reshape(1)]
+    cur = buf
+    perm = [(i, (i + 1) % N) for i in range(N)]
+    for _ in range(N - 1):
+        cur = jax.lax.ppermute(cur, axis_name, perm)
+        parts.append(cur)
+    me = jax.lax.axis_index(axis_name)
+    # parts[s] came from device (me - s) % N; reorder to device order 0..N-1
+    recv = jnp.stack(parts)                       # (N, cap, words)
+    src = (me - jnp.arange(N)) % N
+    order = jnp.zeros(N, jnp.int32).at[src].set(jnp.arange(N, dtype=jnp.int32))
+    recv = recv[order].reshape(N * cap, -1)
+    cols = unpack_columns(recv, spec)
+    valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
+    out = compact(Table(cols, jnp.asarray(N * cap, jnp.int32)), valid)
+    stats = ExchangeStats(kind="broadcast_p2p", participants=N,
+                          message_bytes=cap * buf.shape[1] * 4,
+                          total_bytes=cap * buf.shape[1] * 4 * (N - 1),
+                          collectives=N)  # N-1 permutes + counts gather
+    return out, stats
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+
+def partial_to_global(partials: dict[str, jax.Array], ops: dict[str, str],
+                      axis_name: str) -> dict[str, jax.Array]:
+    """ncclAllReduce equivalent for final scalar aggregation."""
+    out = {}
+    for k, v in partials.items():
+        op = ops[k]
+        if op in ("sum", "count"):
+            out[k] = jax.lax.psum(v, axis_name)
+        elif op == "min":
+            out[k] = jax.lax.pmin(v, axis_name)
+        elif op == "max":
+            out[k] = jax.lax.pmax(v, axis_name)
+        else:
+            raise ValueError(op)
+    return out

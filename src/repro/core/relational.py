@@ -1,0 +1,264 @@
+"""Static-shape relational operators in pure JAX (the per-device TQP compute layer).
+
+TPU adaptation (DESIGN.md §2): no atomics / no dynamic shapes, so
+  * filter        = mask + stable-argsort compaction (sorting network)
+  * hash join     = sort build side + ``searchsorted`` probe (unique build keys —
+                    every TPC-H join is FK->PK once plans order probe/build sides)
+  * group-by      = sort + segment reduction; small known domains use the
+                    one-hot MXU kernel in ``repro.kernels.segsum``
+  * order-by      = multi-pass stable argsort with validity sentinels
+
+Every op preserves the Table invariant: valid rows compacted to the front,
+``count`` = number of valid rows, capacity static.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import Table, KEY_SENTINEL
+
+__all__ = [
+    "compact",
+    "filter_rows",
+    "combine_keys",
+    "join_unique",
+    "semi_join",
+    "anti_join",
+    "left_join",
+    "group_aggregate",
+    "sort_by",
+    "limit",
+    "static_shrink",
+    "hash_partition_ids",
+]
+
+_I64 = jnp.int64
+_HASH_C1 = np.uint64(0xFF51AFD7ED558CCD)
+_HASH_C2 = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+# ---------------------------------------------------------------------------
+# compaction / filtering
+# ---------------------------------------------------------------------------
+
+def compact(t: Table, keep: jax.Array) -> Table:
+    """Move rows where ``keep & valid`` to the front; count = how many."""
+    keep = keep & t.valid_mask()
+    order = jnp.argsort(~keep, stable=True)  # keep=True rows first, stable
+    cols = {k: v[order] for k, v in t.columns.items()}
+    return Table(cols, keep.sum().astype(jnp.int32))
+
+
+def filter_rows(t: Table, mask: jax.Array) -> Table:
+    return compact(t, mask)
+
+
+def limit(t: Table, n: int) -> Table:
+    """First n valid rows (callers sort first).  Statically shrinks capacity."""
+    cols = {k: v[:n] for k, v in t.columns.items()}
+    return Table(cols, jnp.minimum(t.count, n).astype(jnp.int32))
+
+
+def static_shrink(t: Table, new_capacity: int) -> tuple[Table, jax.Array]:
+    """Shrink capacity (planner's selectivity hint).  Returns (table, overflowed).
+
+    Overflow (count > new_capacity) signals the fault-tolerant runner to retry
+    with a larger capacity — the static-shape analogue of the paper's
+    size-metadata exchange guarding receive-buffer allocation.
+    """
+    overflow = t.count > new_capacity
+    cols = {k: v[:new_capacity] for k, v in t.columns.items()}
+    return Table(cols, jnp.minimum(t.count, new_capacity).astype(jnp.int32)), overflow
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+def combine_keys(cols: Sequence[jax.Array]) -> jax.Array:
+    """Pack two non-negative int key columns (< 2^31 each) into one int64.
+
+    More than two keys must be packed explicitly by the plan (e.g.
+    ``(brand*NTYPES + type)*NSIZES + size``) so collision-freedom is provable.
+    """
+    if len(cols) > 2:
+        raise ValueError("pack >2 keys explicitly in the plan (collision safety)")
+    k = cols[0].astype(_I64)
+    for c in cols[1:]:
+        k = (k << 32) | c.astype(_I64)
+    return k
+
+
+def _valid_key(t: Table, key: jax.Array) -> jax.Array:
+    """Key column with padding rows forced to the +inf sentinel."""
+    return jnp.where(t.valid_mask(), key.astype(_I64), KEY_SENTINEL)
+
+
+def hash_partition_ids(key: jax.Array, num_partitions: int) -> jax.Array:
+    """Fingerprint-based destination ids for shuffle (splitmix64 finalizer)."""
+    k = key.astype(_I64).astype(jnp.uint64)
+    k = (k ^ (k >> 33)) * _HASH_C1
+    k = (k ^ (k >> 33)) * _HASH_C2
+    k = k ^ (k >> 33)
+    return (k % np.uint64(num_partitions)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# joins (unique build side)
+# ---------------------------------------------------------------------------
+
+def _probe(probe_key: jax.Array, probe_valid: jax.Array,
+           build: Table, build_key: jax.Array):
+    """Sorted-build searchsorted probe.  Returns (matched, build_row_idx)."""
+    bkey = _valid_key(build, build_key)
+    order = jnp.argsort(bkey)
+    bkey_sorted = bkey[order]
+    pk = probe_key.astype(_I64)
+    pos = jnp.searchsorted(bkey_sorted, pk)
+    pos = jnp.minimum(pos, build.capacity - 1)
+    matched = (bkey_sorted[pos] == pk) & probe_valid & (pk != KEY_SENTINEL)
+    return matched, order[pos]
+
+
+def join_unique(probe: Table, build: Table, probe_on: jax.Array,
+                build_on: jax.Array, take: Sequence[str]) -> Table:
+    """Inner join; ``build`` keys must be unique among valid rows.
+
+    Output = probe rows that matched, plus ``take`` columns gathered from build.
+    Output capacity = probe capacity (FK->PK join never expands the probe side).
+    """
+    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on)
+    cols = dict(probe.columns)
+    for name in take:
+        if name in cols:
+            raise ValueError(f"join output column collision: {name}")
+        cols[name] = build[name][bidx]
+    return compact(Table(cols, probe.count), matched)
+
+
+def semi_join(probe: Table, build: Table, probe_on, build_on) -> Table:
+    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on)
+    return compact(probe, matched)
+
+
+def anti_join(probe: Table, build: Table, probe_on, build_on) -> Table:
+    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on)
+    return compact(probe, ~matched & probe.valid_mask())
+
+
+def left_join(probe: Table, build: Table, probe_on, build_on,
+              take: Sequence[str], defaults: dict[str, float | int]) -> Table:
+    """Left outer join; unmatched probe rows take ``defaults``; adds ``__matched``."""
+    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on)
+    cols = dict(probe.columns)
+    for name in take:
+        gathered = build[name][bidx]
+        cols[name] = jnp.where(matched, gathered,
+                               jnp.asarray(defaults[name], dtype=gathered.dtype))
+    cols["__matched"] = matched
+    return Table(cols, probe.count)
+
+
+# ---------------------------------------------------------------------------
+# grouped aggregation
+# ---------------------------------------------------------------------------
+
+_MERGE_OP = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
+
+
+def group_aggregate(t: Table, key_cols: Sequence[str],
+                    aggs: Sequence[tuple[str, str, jax.Array | str | None]]) -> Table:
+    """Sort-based grouped aggregation.
+
+    aggs: (out_name, op, values) with op in {sum,count,min,max}; ``values`` is an
+    array (an expression over t), a column name, or None for count.
+    Output: key columns + agg columns; count = number of groups;
+    capacity preserved (n_groups <= count <= capacity).
+    """
+    cap = t.capacity
+    key = _valid_key(t, combine_keys([t[k] for k in key_cols])) if key_cols else \
+        jnp.where(t.valid_mask(), jnp.int64(0), KEY_SENTINEL)
+    order = jnp.argsort(key)
+    sk = key[order]
+    valid = sk != KEY_SENTINEL
+    first = jnp.concatenate([valid[:1], (sk[1:] != sk[:-1]) & valid[1:]])
+    gid = jnp.cumsum(first.astype(jnp.int32)) - 1           # 0-based group id
+    ngroups = first.sum().astype(jnp.int32)
+    # padding rows route to segment cap-1 which is provably not a valid group
+    # whenever padding exists (ngroups <= count <= cap-1); see tests.
+    seg = jnp.where(valid, gid, cap - 1)
+
+    out: dict[str, jax.Array] = {}
+    for k in key_cols:
+        v = t[k][order]
+        fill = jnp.zeros((), v.dtype)
+        # scatter-set: all rows of a group share the key value, so duplicate
+        # writes are benign; padding rows write the fill value into slot cap-1.
+        out[k] = jnp.zeros((cap,), v.dtype).at[seg].set(jnp.where(valid, v, fill),
+                                                        mode="drop")
+    for out_name, op, values in aggs:
+        if values is None:
+            v = jnp.ones((cap,), dtype=jnp.int64)
+        elif isinstance(values, str):
+            v = t[values]
+        else:
+            v = values
+        v = v[order]
+        if op == "count":
+            v = jnp.where(valid, 1, 0).astype(jnp.int64)
+            out[out_name] = jax.ops.segment_sum(v, seg, num_segments=cap,
+                                                indices_are_sorted=True)
+        elif op == "sum":
+            v = jnp.where(valid, v, jnp.zeros((), v.dtype))
+            out[out_name] = jax.ops.segment_sum(v, seg, num_segments=cap,
+                                                indices_are_sorted=True)
+        elif op == "min":
+            big = _dtype_max(v.dtype)
+            v = jnp.where(valid, v, big)
+            out[out_name] = jax.ops.segment_min(v, seg, num_segments=cap,
+                                                indices_are_sorted=True)
+        elif op == "max":
+            small = _dtype_min(v.dtype)
+            v = jnp.where(valid, v, small)
+            out[out_name] = jax.ops.segment_max(v, seg, num_segments=cap,
+                                                indices_are_sorted=True)
+        else:
+            raise ValueError(f"unknown agg op {op!r}")
+    return Table(out, ngroups)
+
+
+def _dtype_max(dt):
+    return jnp.asarray(np.inf if jnp.issubdtype(dt, jnp.floating) else np.iinfo(dt).max, dt)
+
+
+def _dtype_min(dt):
+    return jnp.asarray(-np.inf if jnp.issubdtype(dt, jnp.floating) else np.iinfo(dt).min, dt)
+
+
+# ---------------------------------------------------------------------------
+# ordering
+# ---------------------------------------------------------------------------
+
+def sort_by(t: Table, keys: Sequence[tuple[str, bool]]) -> Table:
+    """ORDER BY; keys = [(column, ascending)], first key most significant.
+
+    Multi-pass stable argsort from least-significant key; padding rows always
+    sink to the back via sentinels.
+    """
+    valid = t.valid_mask()
+    order = jnp.arange(t.capacity)
+    for col, asc in reversed(list(keys)):
+        k = t[col][order]
+        v = valid[order]
+        if jnp.issubdtype(k.dtype, jnp.floating):
+            k = jnp.where(v, k if asc else -k, np.inf)
+        else:
+            k = k.astype(_I64)
+            k = jnp.where(v, k if asc else -k, KEY_SENTINEL)
+        step = jnp.argsort(k, stable=True)
+        order = order[step]
+    return Table({k: v[order] for k, v in t.columns.items()}, t.count)

@@ -1,0 +1,157 @@
+"""Columnar tables with static row capacity — the tensor-format data model of TQP.
+
+A Table is a pytree of equal-length 1-D column arrays plus a dynamic valid-row
+``count``.  Rows ``[0, count)`` are valid; rows beyond are padding whose contents
+are unspecified.  Static capacity is the TPU/XLA adaptation of TQP's variable-size
+tensors (see DESIGN.md §2): every relational operator below preserves the invariant
+that valid rows are compacted to the front.
+
+String columns are dictionary-encoded int32 codes; the dictionaries live host-side
+in the :class:`Database` (they are metadata, never traced).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Table",
+    "Database",
+    "from_numpy",
+    "to_numpy",
+    "days",
+    "KEY_SENTINEL",
+]
+
+# Sentinel pushed to the back by sorts; larger than any TPC-H key (SF 3000 keys
+# stay < 2^63 - 1).
+KEY_SENTINEL = np.iinfo(np.int64).max
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Table:
+    """Dict of 1-D columns (same static length = capacity) + dynamic valid count."""
+
+    columns: dict[str, jax.Array]
+    count: jax.Array  # int32 scalar (or int on host)
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.count,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        return cls(dict(zip(names, children[:-1])), children[-1])
+
+    # -- convenience -----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        if not self.columns:
+            return 0
+        return next(iter(self.columns.values())).shape[0]
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int64) < self.count
+
+    def replace(self, **cols: jax.Array) -> "Table":
+        new = dict(self.columns)
+        new.update(cols)
+        return Table(new, self.count)
+
+    def select(self, *names: str) -> "Table":
+        return Table({n: self.columns[n] for n in names}, self.count)
+
+    def drop(self, *names: str) -> "Table":
+        return Table({k: v for k, v in self.columns.items() if k not in names}, self.count)
+
+    def rename(self, mapping: Mapping[str, str]) -> "Table":
+        return Table({mapping.get(k, k): v for k, v in self.columns.items()}, self.count)
+
+    def with_count(self, count) -> "Table":
+        return Table(dict(self.columns), jnp.asarray(count, dtype=jnp.int32)
+                     if not isinstance(count, (int, np.integer)) else count)
+
+
+@dataclasses.dataclass
+class Database:
+    """Host-side container: named tables + string dictionaries + scale metadata.
+
+    ``dicts[col]`` is a numpy array of strings such that code ``i`` in column
+    ``col`` decodes to ``dicts[col][i]``.  Dictionaries are shared across tables
+    (e.g. every ``*_nationkey`` decodes through ``dicts['nation_name']``).
+    """
+
+    tables: dict[str, Table]
+    dicts: dict[str, np.ndarray]
+    scale: float = 0.0
+
+    def dict_mask(self, col: str, pred: Callable[[np.ndarray], np.ndarray]) -> np.ndarray:
+        """Evaluate a host-side predicate over the dictionary of ``col``.
+
+        This is how TQP executes LIKE / IN over dictionary-encoded strings: the
+        predicate runs once over the (small) dictionary and becomes a boolean
+        lookup tensor gathered per row inside the compiled program.  Returned
+        as numpy so callers can embed it as a trace-time constant.
+        """
+        return np.asarray(pred(self.dicts[col]))
+
+    def code(self, col: str, value: str) -> int:
+        """Dictionary code of an exact string value (host-side)."""
+        d = self.dicts[col]
+        idx = np.nonzero(d == value)[0]
+        if idx.size == 0:
+            raise KeyError(f"{value!r} not in dictionary for {col!r}")
+        return int(idx[0])
+
+    def codes(self, col: str, values) -> list[int]:
+        return [self.code(col, v) for v in values]
+
+
+_EPOCH = np.datetime64("1970-01-01")
+
+
+def days(date_str: str) -> int:
+    """Date literal -> int32 epoch days (host-side; interval math is plain ints)."""
+    return int((np.datetime64(date_str) - _EPOCH).astype("timedelta64[D]").astype(np.int64))
+
+
+def add_months(date_str: str, months: int) -> int:
+    d = np.datetime64(date_str, "M") + np.timedelta64(months, "M")
+    # preserve day-of-month where TPC-H literals are always day 1 of a month
+    day = int(date_str.split("-")[2])
+    return days(str(d) + f"-{day:02d}")
+
+
+def from_numpy(cols: Mapping[str, np.ndarray], capacity: int | None = None) -> Table:
+    """Host numpy columns -> padded device Table."""
+    n = len(next(iter(cols.values())))
+    cap = capacity if capacity is not None else n
+    assert cap >= n, (cap, n)
+    out = {}
+    for k, v in cols.items():
+        v = np.asarray(v)
+        pad = np.zeros((cap - n,) + v.shape[1:], dtype=v.dtype)
+        out[k] = jnp.asarray(np.concatenate([v, pad], axis=0))
+    return Table(out, jnp.asarray(n, dtype=jnp.int32))
+
+
+def to_numpy(t: Table) -> dict[str, np.ndarray]:
+    """Device Table -> exact-size host columns (drops padding)."""
+    n = int(t.count)
+    return {k: np.asarray(v)[:n] for k, v in t.columns.items()}

@@ -1,0 +1,1 @@
+"""Data substrate: TPC-H / JCC-H generators + partitioned loading."""

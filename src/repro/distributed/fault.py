@@ -1,0 +1,104 @@
+"""Fault tolerance + skew mitigation for distributed queries and training.
+
+Queries: the paper's model (§2.4) — re-execution at interactive speed.  Our
+static-shape adaptation adds one structured failure mode: capacity overflow
+(a shuffle bucket or shrink exceeded its planned size).  The runner escalates
+the capacity factor and re-executes; unstructured failures (preempted node →
+surfaced as an exception in a real deployment) get bounded retries.
+
+Skew: the monitor computes the paper's §3.5 statistic (per-node send/recv max
+over mean) from exchange recv-counts; the planner consults Eq. 3 to pick
+broadcast vs shuffle given table sizes, and hot-key salting splits dominant
+keys before a grouped shuffle (local pre-aggregation already bounds
+per-key payload — salting bounds residual placement skew).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core import backend as B
+from repro.core import perfmodel as pm
+
+__all__ = ["QueryRunner", "RunResult", "choose_exchange"]
+
+
+@dataclasses.dataclass
+class RunResult:
+    result: dict
+    stats: B.PlanStats
+    attempts: int
+    capacity_factor: float
+    wall_s: float
+
+
+class QueryRunner:
+    """Re-execution with capacity escalation (paper §2.4 fault tolerance)."""
+
+    def __init__(self, db, mesh, axis: str = "data",
+                 capacity_factor: float = 2.0, max_attempts: int = 4,
+                 escalation: float = 2.0, packed_exchange: bool = True):
+        self.db = db
+        self.mesh = mesh
+        self.axis = axis
+        self.capacity_factor = capacity_factor
+        self.max_attempts = max_attempts
+        self.escalation = escalation
+        self.packed = packed_exchange
+
+    def run(self, query_fn) -> RunResult:
+        factor = self.capacity_factor
+        last_exc = None
+        for attempt in range(1, self.max_attempts + 1):
+            t0 = time.perf_counter()
+            try:
+                result, stats, overflow = B.run_distributed(
+                    query_fn, self.db, self.mesh, self.axis,
+                    capacity_factor=factor, packed_exchange=self.packed)
+            except Exception as exc:   # node failure -> re-execute
+                last_exc = exc
+                continue
+            wall = time.perf_counter() - t0
+            if not overflow:
+                return RunResult(result, stats, attempt, factor, wall)
+            factor *= self.escalation   # structured failure: bigger buffers
+        if last_exc is not None:
+            raise last_exc
+        raise RuntimeError(
+            f"query overflowed at capacity_factor={factor:.1f} "
+            f"after {self.max_attempts} attempts")
+
+
+def choose_exchange(cluster: pm.ClusterSpec, v: int, small_bytes: float,
+                    large_bytes: float) -> str:
+    """Cost-based broadcast-vs-shuffle decision (paper Eq. 3)."""
+    return "broadcast" if pm.broadcast_beats_shuffle(
+        cluster, v, small_bytes, large_bytes) else "shuffle"
+
+
+def skew_imbalance(recv_counts: np.ndarray, k: int = 1) -> float:
+    """Paper §3.5: max over nodes / mean (k devices per node)."""
+    v = len(recv_counts) // k
+    per_node = recv_counts.reshape(v, k).sum(axis=1)
+    return float(per_node.max() / max(per_node.mean(), 1e-9))
+
+
+def salt_hot_keys(keys: np.ndarray, n_partitions: int,
+                  hot_threshold: float = 4.0) -> np.ndarray:
+    """Host-side salting: keys whose frequency exceeds ``hot_threshold`` x the
+    mean get a per-row salt so their rows spread over all partitions.  Used
+    before grouped shuffles (the merge aggregation is salt-agnostic since the
+    final combine runs per full key)."""
+    uniq, counts = np.unique(keys, return_counts=True)
+    mean = counts.mean()
+    hot = set(uniq[counts > hot_threshold * mean].tolist())
+    if not hot:
+        return keys
+    salted = keys.astype(np.int64).copy()
+    is_hot = np.isin(keys, list(hot))
+    salt = np.arange(is_hot.sum(), dtype=np.int64) % n_partitions
+    salted[is_hot] = salted[is_hot] * np.int64(n_partitions) + salt
+    return salted

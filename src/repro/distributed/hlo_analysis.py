@@ -1,0 +1,356 @@
+"""Roofline terms from compiled artifacts (no hardware needed).
+
+``cost_analysis()`` counts a while-loop body ONCE, so scanned-layer models
+undercount by ~n_layers.  This module does loop-aware accounting directly on
+the optimized HLO text:
+
+  * computations are parsed into blocks with a name->shape symbol table;
+  * ``while`` ops carry ``backend_config known_trip_count`` — bodies are
+    weighted by their trip counts (nested loops compose multiplicatively);
+  * dot FLOPs   = 2 * numel(result) * prod(lhs contracting dims)   (exact);
+  * HBM traffic = sum of result+operand bytes over top-level ops (fusion
+    internals excluded — they live in registers/VMEM);
+  * collective bytes = result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (async -start counted
+    once, -done skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+
+__all__ = ["CollectiveStats", "parse_collectives", "analyze_module",
+           "roofline_terms", "op_histogram",
+           "V5E_PEAK_FLOPS", "V5E_HBM_BW", "V5E_ICI_BW"]
+
+V5E_PEAK_FLOPS = 197e12       # bf16, per chip
+V5E_HBM_BW = 819e9            # bytes/s
+V5E_ICI_BW = 50e9             # bytes/s per link; ~4 usable links per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))"
+    r"\s+([\w\-]+)\(([^)]*)\)(.*)$")
+# header: "%name (params...) -> result {"; param types may nest parens (tuples)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    entry: bool
+    flops: float = 0.0
+    traffic: float = 0.0
+    scores_traffic: float = 0.0   # ops whose result is seq x seq shaped
+    coll_bytes: Counter = dataclasses.field(default_factory=Counter)
+    coll_count: Counter = dataclasses.field(default_factory=Counter)
+    children: list = dataclasses.field(default_factory=list)  # (name, mult, traffic?)
+
+
+def _split_computations(text: str):
+    comps, cur, name, entry = {}, None, None, False
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and not line.startswith(" "):
+            name = m.group(2)
+            entry = bool(m.group(1))
+            cur = []
+            comps[name] = (entry, cur)
+        elif line.startswith("}"):
+            name = None
+        elif name is not None:
+            cur.append(line)
+    return comps
+
+
+def _is_scores(shape_str: str, seq_dims) -> bool:
+    """Result trailing two dims both sequence-length-like => attention scores
+    / mask chain (what the flash kernel keeps in VMEM)."""
+    if not seq_dims:
+        return False
+    dims = _shape_dims(shape_str)
+    return bool(dims and len(dims) >= 2 and dims[-1] in seq_dims
+                and dims[-2] in seq_dims)
+
+
+def _parse_ops(lines):
+    """Parse a computation body into op records + symbol table."""
+    ops, shapes = [], {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        rn, rt, op, operands, rest = m.groups()
+        shapes[rn] = rt
+        ops.append((rn, rt, op, [o.strip().lstrip("%")
+                                 for o in operands.split(",") if o.strip()],
+                    rest))
+    return ops, shapes
+
+
+def _fusion_io(ops, shapes):
+    """(write_bytes, read_bytes, io_shapes) of a fusion computation.
+
+    Parameters consumed only through dynamic-slice count as the sliced bytes;
+    a dynamic-update-slice root writes only its update region (and its
+    operand-0 buffer is updated in place — zero read)."""
+    params = {rn for rn, _, op, _, _ in ops if op == "parameter"}
+    uses: dict[str, list] = {p: [] for p in params}
+    root = ops[-1] if ops else None
+    for rn, rt, op, opnds, rest in ops:
+        for i, o in enumerate(opnds):
+            if o in uses:
+                uses[o].append((op, i, rt))
+    read = 0.0
+    io_shapes = []
+    for p in params:
+        pu = uses[p]
+        if not pu:
+            continue
+        if all(op == "dynamic-slice" and i == 0 for op, i, _ in pu):
+            read += sum(_shape_bytes(rt) for _, _, rt in pu)
+            io_shapes.extend(rt for _, _, rt in pu)
+        elif all(op == "dynamic-update-slice" and i == 0 for op, i, _ in pu):
+            pass                                   # in-place buffer: no read
+        else:
+            read += _shape_bytes(shapes[p])
+            io_shapes.append(shapes[p])
+    if root is not None and root[2] == "dynamic-update-slice":
+        upd = root[3][1] if len(root[3]) > 1 else None
+        write = _shape_bytes(shapes.get(upd, root[1]))
+        io_shapes.append(shapes.get(upd, root[1]))
+    else:
+        write = _shape_bytes(root[1]) if root else 0.0
+        if root:
+            io_shapes.append(root[1])
+    return write, read, io_shapes
+
+
+def _analyze_comp(name: str, entry: bool, parsed, all_parsed,
+                  seq_dims=()) -> _Comp:
+    comp = _Comp(name, entry)
+    ops, shapes = parsed
+    for rn, res_type, op, ops_list, rest in ops:
+        base_op = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base_op in _COLLECTIVES:
+            comp.coll_bytes[base_op] += _shape_bytes(res_type)
+            comp.coll_count[base_op] += 1
+        if op == "dot":
+            out_dims = _shape_dims(res_type) or []
+            numel_out = 1
+            for d in out_dims:
+                numel_out *= d
+            lhs_shape = _shape_dims(shapes.get(ops_list[0], "")) \
+                if ops_list else []
+            cdims = _DIMS_RE.search(rest)
+            k = 1
+            if cdims and lhs_shape:
+                for i in cdims.group(1).split(","):
+                    if i != "" and int(i) < len(lhs_shape):
+                        k *= lhs_shape[int(i)]
+            comp.flops += 2.0 * numel_out * k
+        # traffic — op-specific models
+        if op not in _NO_TRAFFIC:
+            res_bytes = _shape_bytes(res_type)
+            io_shapes = [res_type]
+            if op == "fusion":
+                called = _CALLS_RE.search(rest)
+                sub = all_parsed.get(called.group(1)) if called else None
+                if sub:
+                    w, rd, io_shapes = _fusion_io(*sub)
+                    t = w + rd
+                else:
+                    t = res_bytes
+            elif op in ("dynamic-slice", "slice", "broadcast", "iota", "pad",
+                        "reshape", "transpose", "reverse"):
+                t = 2 * res_bytes
+            elif op == "dynamic-update-slice":
+                upd = shapes.get(ops_list[1], "") if len(ops_list) > 1 else ""
+                t = 2 * (_shape_bytes(upd) or res_bytes)
+                io_shapes = [upd or res_type]
+            elif op in ("gather", "scatter"):
+                t = 2 * res_bytes + sum(_shape_bytes(shapes.get(o, ""))
+                                        for o in ops_list[1:])
+            else:
+                t = res_bytes
+                for o in ops_list:
+                    if o in shapes:
+                        t += _shape_bytes(shapes[o])
+                        io_shapes.append(shapes[o])
+            comp.traffic += t
+            if any(_is_scores(sh, seq_dims) for sh in io_shapes):
+                comp.scores_traffic += t
+        # sub-computation edges
+        if op == "while":
+            trip = 1
+            tm = _TRIP_RE.search(rest)
+            if tm:
+                trip = int(tm.group(1))
+            for cm in _CALLS_RE.finditer(rest):
+                comp.children.append((cm.group(1), trip, True))
+        elif op in ("call", "conditional"):
+            for cm in _CALLS_RE.finditer(rest):
+                comp.children.append((cm.group(1), 1, True))
+        elif op in ("fusion", "reduce", "map", "sort", "scatter",
+                    "reduce-window", "select-and-scatter", "all-reduce",
+                    "reduce-scatter", "custom-call"):
+            for cm in _CALLS_RE.finditer(rest):
+                # internals: flops + collectives count; HBM traffic does not
+                comp.children.append((cm.group(1), 1, False))
+    return comp
+
+
+def analyze_module(text: str, seq_dims=()) -> dict:
+    """Loop-aware totals for the per-device module.
+
+    ``seq_dims``: sequence lengths of the cell — ops whose result is
+    seq x seq shaped are attributed to ``scores_traffic_bytes`` (the portion
+    a fused flash-attention kernel never writes to HBM)."""
+    raw = _split_computations(text)
+    all_parsed = {n: _parse_ops(ls) for n, (e, ls) in raw.items()}
+    comps = {n: _analyze_comp(n, e, all_parsed[n], all_parsed, seq_dims)
+             for n, (e, ls) in raw.items()}
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0,
+                "scores_traffic_bytes": 0.0,
+                "collective_bytes": {}, "collective_count": {}}
+
+    memo: dict[tuple, tuple] = {}
+
+    def total(name: str, with_traffic: bool, depth=0):
+        key = (name, with_traffic)
+        if key in memo:
+            return memo[key]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return (0.0, 0.0, 0.0, Counter(), Counter())
+        fl = c.flops
+        tr = c.traffic if with_traffic else 0.0
+        sc = c.scores_traffic if with_traffic else 0.0
+        cb, cc = Counter(c.coll_bytes), Counter(c.coll_count)
+        for child, mult, traffic_ok in c.children:
+            f2, t2, s2, b2, c2 = total(child, with_traffic and traffic_ok,
+                                       depth + 1)
+            fl += mult * f2
+            tr += mult * t2
+            sc += mult * s2
+            for k, v in b2.items():
+                cb[k] += mult * v
+            for k, v in c2.items():
+                cc[k] += mult * v
+        memo[key] = (fl, tr, sc, cb, cc)
+        return memo[key]
+
+    fl, tr, sc, cb, cc = total(entry.name, True)
+    return {"flops": fl, "traffic_bytes": tr, "scores_traffic_bytes": sc,
+            "collective_bytes": dict(cb), "collective_count": dict(cc)}
+
+
+# -- legacy flat interface (kept for quick greps / tests) --------------------
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, loop_aware: bool = True) -> CollectiveStats:
+    if loop_aware:
+        a = analyze_module(hlo_text)
+        if a["collective_bytes"]:
+            return CollectiveStats(a["collective_bytes"],
+                                   a["collective_count"])
+        # fall through to the flat regex (synthetic / headerless snippets)
+    by_bytes: Counter = Counter()
+    by_count: Counter = Counter()
+    op_re = re.compile(
+        r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start|-done)?\(", re.M)
+    for m in op_re.finditer(hlo_text):
+        shape_str, kind, startdone = m.group(1), m.group(2), m.group(3)
+        if startdone == "-done":
+            continue
+        by_bytes[kind] += _shape_bytes(shape_str)
+        by_count[kind] += 1
+    return CollectiveStats(dict(by_bytes), dict(by_count))
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                     "custom-call")) -> dict:
+    hist = {}
+    for op in ops:
+        hist[op] = len(re.findall(rf"=\s*(?:\([^)]*\)|\S+)\s+{op}\(",
+                                  hlo_text))
+    return hist
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, n_chips: int,
+                   model_flops: float = 0.0,
+                   peak_flops: float = V5E_PEAK_FLOPS,
+                   hbm_bw: float = V5E_HBM_BW,
+                   ici_bw: float = V5E_ICI_BW,
+                   ici_links: float = 4.0) -> dict:
+    """The three §Roofline terms, in seconds (per-device quantities in)."""
+    t_compute = hlo_flops / peak_flops
+    t_memory = hlo_bytes / hbm_bw
+    t_coll = collective_bytes / (ici_bw * ici_links)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_compute, t_memory, t_coll)
+    out = {**terms, "bottleneck": dom.replace("_s", ""),
+           "step_lower_bound_s": bound}
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flop_frac"] = model_flops / max(hlo_flops * n_chips, 1.0)
+        out["roofline_frac"] = (model_flops / (n_chips * peak_flops)) / \
+            max(bound, 1e-12)
+    return out

@@ -1,0 +1,171 @@
+"""Sharding rules: parameter PartitionSpecs by tree path + activation/cache specs.
+
+Scheme (DESIGN.md §4): 2-D param sharding — FSDP over the data(+pod) axes on
+one matrix dim, tensor parallelism over ``model`` on the other; experts shard
+over ``model`` (EP); optimizer state mirrors param specs (ZeRO-3 via GSPMD).
+KV caches shard batch over data — except batch-1 long-context decode, where the
+*sequence* dim shards over data and GSPMD's partial-softmax all-reduce gives
+flash-decode for free.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "make_constrain",
+           "named", "MeshAxes"]
+
+
+class MeshAxes:
+    """fsdp = axes sharding the 'data' matrix dim; tp = tensor axis."""
+
+    def __init__(self, fsdp: Sequence[str] = ("data",), tp: str = "model"):
+        self.fsdp = tuple(fsdp)
+        self.tp = tp
+
+    def dp(self):
+        return self.fsdp
+
+
+# rule table: leaf name -> spec skeleton with 'F' (fsdp), 'T' (tp), None
+_RULES_2D = {
+    "embed": ("T", "F"), "lm_head": ("F", "T"),
+    "wq": ("F", "T"), "wk": ("F", "T"), "wv": ("F", "T"), "wo": ("T", "F"),
+    "wg": ("F", "T"),
+    "w_gate": ("F", "T"), "w_up": ("F", "T"), "w_down": ("T", "F"),
+    "shared_gate": ("F", "T"), "shared_up": ("F", "T"),
+    "shared_down": ("T", "F"),
+    "router": ("F", None),
+    "wq_a": ("F", None), "wq_b": ("F", "T"),
+    "wkv_a": ("F", None), "wkv_b": ("F", "T"),
+    "w_in": ("F", "T"), "w_out": ("T", "F"),
+    "conv_w": (None, "T"),
+    "w_a": ("F", None), "w_b": (None, "F"),
+    "fk": ("F", "T"), "fv": ("T", "F"), "fr": ("F", "T"),
+    "u": (None, None),
+}
+_RULES_3D = {  # MoE expert stacks (E, D, F) / (E, F, D)
+    "w_gate": ("T", "F", None), "w_up": ("T", "F", None),
+    "w_down": ("T", None, "F"),
+}
+_RULES_1D = {
+    "bq": ("T",), "bk": ("T",), "bv": ("T",), "conv_b": ("T",),
+    "a_log": ("T",), "dt_bias": ("T",), "d_skip": ("T",),
+}
+
+
+def _resolve(skel, axes: MeshAxes):
+    out = []
+    for s in skel:
+        if s == "F":
+            if not axes.fsdp:                  # serving: TP-only params
+                out.append(None)
+            else:
+                out.append(axes.fsdp if len(axes.fsdp) > 1 else axes.fsdp[0])
+        elif s == "T":
+            out.append(axes.tp)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(params_like, axes: MeshAxes):
+    """Spec tree matching the param tree (works on ShapeDtypeStructs too)."""
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = names[-1]
+        stacked = "segments" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        skel = None
+        if nd == 3 and name in _RULES_3D:
+            skel = _RULES_3D[name]
+        elif nd == 2 and name in _RULES_2D:
+            skel = _RULES_2D[name]
+        elif nd == 1 and name in _RULES_1D:
+            skel = _RULES_1D[name]
+        if skel is None:
+            spec = P(*([None] * nd))                    # replicate (norms etc.)
+        else:
+            spec = _resolve(skel, axes)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_like)
+
+
+def batch_specs(axes: MeshAxes, spec_like):
+    """tokens/labels (B, S) -> batch over dp; patches (B, P, D) likewise."""
+    dp = axes.dp()
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def rule(leaf):
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, spec_like)
+
+
+def cache_specs(cfg: ArchConfig, cache_like, axes: MeshAxes, batch: int,
+                mesh_shape: dict):
+    """KV-cache/state specs; batch-1 long decode shards the sequence dim."""
+    dp_axes = axes.dp()
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = int(np.prod([mesh_shape[a] for a in dp_axes]))
+    tp_size = mesh_shape[axes.tp]
+    batch_sharded = batch % dp_size == 0 and batch >= dp_size
+
+    def rule(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = names[-1] if names else None
+        stacked = "segments" in names
+        nd = leaf.ndim - (1 if stacked else 0)
+        # KV caches: (B, S, H, hd) | MLA (B, S, r) | states (B, ...)
+        spec: list = [None] * nd
+        if nd >= 1:
+            if batch_sharded:
+                spec[0] = dp
+            elif name in ("k", "v", "ckv", "krope") and nd >= 2:
+                spec[1] = dp                      # seq-sharded flash-decode
+        if name in ("k", "v") and nd == 4 and cfg.n_kv_heads % tp_size == 0:
+            spec[2] = axes.tp
+        out = P(*spec)
+        if stacked:
+            out = P(None, *out)
+        return out
+
+    return jax.tree_util.tree_map_with_path(rule, cache_like)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_constrain(mesh: Mesh, axes: MeshAxes, seq_parallel: bool = False):
+    """Activation-sharding hook for Model.constrain.
+
+    ``seq_parallel`` shards the residual stream's sequence dim over the tensor
+    axis (Megatron-SP): the norm/elementwise chains between attention and MLP
+    run on 1/TP of the tokens instead of being replicated TP times, and the
+    output-projection all-reduce splits into reduce-scatter + all-gather."""
+    dp = axes.dp()
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def constrain(x, kind: str):
+        if x.ndim < 2:
+            return x
+        if kind == "logits":
+            spec = P(dp, *([None] * (x.ndim - 2)), axes.tp)
+        elif kind == "residual" and seq_parallel and x.ndim == 3:
+            spec = P(dp, axes.tp, None)
+        else:
+            spec = P(dp, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

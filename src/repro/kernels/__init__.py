@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §6).
+
+Each kernel package ships:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, layout, interpret switch)
+  ref.py    — pure-jnp oracle used by the sweep tests
+
+On this CPU container kernels are validated with interpret=True; the BlockSpecs
+are sized for TPU v5e VMEM (~128 MiB/core budgeted conservatively at 64 MiB).
+"""

@@ -1,0 +1,100 @@
+"""Blocked online-softmax attention (FlashAttention) for TPU, with GQA + causal.
+
+Grid: (batch*q_heads, q_blocks, kv_blocks) — the kv loop is innermost so the
+(q_blk, d) query tile, f32 accumulator, and running max/sum stay VMEM-resident
+while (kv_blk, d) key/value tiles stream through.  GQA maps each query head to
+its kv head in the BlockSpec index_map (no KV duplication in HBM or VMEM).
+
+VMEM working set per step: q_blk*d (q) + 2*kv_blk*d (k,v) + q_blk*kv_blk (s)
++ q_blk*d f32 accumulator — with q_blk=kv_blk=512, d=128: ~1.3 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            q_blk: int, kv_blk: int, scale: float, causal: bool):
+    kv_step = pl.program_id(2)
+    q_step = pl.program_id(1)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # skip fully-masked kv blocks (upper triangle)
+        run = kv_step * kv_blk <= q_step * q_blk + q_blk - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (q_blk, d)
+        k = k_ref[0].astype(jnp.float32)                  # (kv_blk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qi = q_step * q_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 0)
+            ki = kv_step * kv_blk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_blk, kv_blk), 1)
+            s = jnp.where(qi >= ki, s, _NEG_INF)
+        m_prev = m_ref[...][:, :1]                        # (q_blk, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)                            # (q_blk, kv_blk)
+        alpha = jnp.exp(m_prev - m_cur)                   # (q_blk, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+
+    @pl.when(kv_step == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...][:, :1], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           q_blk: int = 512, kv_blk: int = 512,
+                           causal: bool = True,
+                           interpret: bool = False) -> jax.Array:
+    """q (BH, Sq, D), k/v (BKV, Skv, D) with BH = BKV * group_size.
+
+    Head-major layout: caller flattens (batch, heads) -> BH and maps query
+    head h to kv head h // group_size (done here via index_map).
+    """
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    assert bh % bkv == 0
+    group = bh // bkv
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, sq // q_blk, skv // kv_blk)
+    return pl.pallas_call(
+        functools.partial(_kernel, q_blk=q_blk, kv_blk=kv_blk, scale=scale,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, kv_blk, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: running max, running sum (128-lane padded), f32 acc
+            pltpu.VMEM((q_blk, 128), jnp.float32),
+            pltpu.VMEM((q_blk, 128), jnp.float32),
+            pltpu.VMEM((q_blk, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

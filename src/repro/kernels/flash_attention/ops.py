@@ -1,0 +1,37 @@
+"""Public wrapper: (B, H, S, D) layout + GQA flattening + backend switch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "q_blk", "kv_blk", "interpret",
+                                   "use_kernel"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_blk: int = 256, kv_blk: int = 256,
+                    interpret: bool = True, use_kernel: bool = True):
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    use_kernel=False runs the jnp oracle (the model zoo's default on CPU; the
+    kernel is the TPU target and the sweep tests assert equivalence)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if not use_kernel:
+        o = attention_ref(q.reshape(b * hq, sq, d),
+                          k.reshape(b * hkv, skv, d),
+                          v.reshape(b * hkv, skv, d), causal=causal)
+        return o.reshape(b, hq, sq, d)
+    q_blk = min(q_blk, sq)
+    kv_blk = min(kv_blk, skv)
+    assert sq % q_blk == 0 and skv % kv_blk == 0
+    o = flash_attention_pallas(q.reshape(b * hq, sq, d),
+                               k.reshape(b * hkv, skv, d),
+                               v.reshape(b * hkv, skv, d),
+                               q_blk=q_blk, kv_blk=kv_blk, causal=causal,
+                               interpret=interpret)
+    return o.reshape(b, hq, sq, d)

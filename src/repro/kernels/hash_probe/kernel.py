@@ -1,0 +1,59 @@
+"""Bucketized hash-join probe with a VMEM-resident build table.
+
+GPU TQP probes a global hash table with atomics-built chains; the TPU
+adaptation is partition-then-probe: upstream radix partitioning (the shuffle
+machinery) bounds each partition's build side so its bucket table fits VMEM,
+then this kernel probes row blocks against the whole (B, C) bucket table held
+resident in VMEM.
+
+Layout: the build side is arranged (ops.py, sort-based, no atomics) into
+  bkeys (B, C) int32 — C-way buckets, empty slots = sentinel
+  bvals (B, C) int32 — payload row indices
+Probe: bucket = murmur32(key) % B; compare the key against all C candidate
+lanes at once (vectorized, fixed probe length — no data-dependent loops);
+matched payload or -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.radix_hist.kernel import murmur32
+
+SENTINEL = jnp.int32(-2147483648)
+
+
+def _kernel(pk_ref, bk_ref, bv_ref, out_ref, *, blk: int, buckets: int,
+            cap: int):
+    keys = pk_ref[...][:, 0]                              # (blk,)
+    b = (murmur32(keys) % jnp.uint32(buckets)).astype(jnp.int32)
+    cand_k = bk_ref[...][b]                               # (blk, C) gather
+    cand_v = bv_ref[...][b]                               # (blk, C)
+    hit = cand_k == keys[:, None]                         # (blk, C)
+    val = jnp.max(jnp.where(hit, cand_v, -1), axis=1)     # unique build keys
+    out_ref[...] = val[:, None]
+
+
+def hash_probe_pallas(probe_keys: jax.Array, bkeys: jax.Array,
+                      bvals: jax.Array, blk: int = 2048,
+                      interpret: bool = False) -> jax.Array:
+    """probe_keys (n,) int32; bucket table (B, C) -> matched row idx or -1."""
+    n = probe_keys.shape[0]
+    buckets, cap = bkeys.shape
+    assert n % blk == 0
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_kernel, blk=blk, buckets=buckets, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((buckets, cap), lambda i: (0, 0)),   # resident
+            pl.BlockSpec((buckets, cap), lambda i: (0, 0)),   # resident
+        ],
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(probe_keys.reshape(n, 1).astype(jnp.int32), bkeys, bvals)[:, 0]

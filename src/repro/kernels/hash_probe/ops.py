@@ -1,0 +1,81 @@
+"""Public wrapper: sort-based bucket-table build + blocked probe.
+
+Build is pure JAX (stable argsort by bucket — no atomics); overflowing
+buckets (> capacity) raise the recorded overflow flag so callers re-bucket
+with a bigger table, mirroring the exchange layer's capacity discipline.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.radix_hist.kernel import murmur32
+from .kernel import SENTINEL, hash_probe_pallas
+from .ref import hash_probe_ref
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(3, (x - 1).bit_length())
+
+
+@partial(jax.jit, static_argnames=("buckets", "cap"))
+def build_bucket_table(keys: jax.Array, vals: jax.Array, buckets: int,
+                       cap: int = 8):
+    """(m,) unique int32 keys -> ((B, C) keys, (B, C) vals, overflowed)."""
+    m = keys.shape[0]
+    b = (murmur32(keys.astype(jnp.int32)) % jnp.uint32(buckets)).astype(jnp.int32)
+    order = jnp.argsort(b, stable=True)
+    sb = b[order]
+    counts = jax.ops.segment_sum(jnp.ones((m,), jnp.int32), b,
+                                 num_segments=buckets)
+    start = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                             jnp.cumsum(counts, dtype=jnp.int32)[:-1]])
+    slot = jnp.arange(m, dtype=jnp.int32) - start[sb]
+    flat = sb * cap + jnp.minimum(slot, cap - 1)
+    keep = slot < cap
+    flat = jnp.where(keep, flat, buckets * cap)
+    bk = jnp.full((buckets * cap,), SENTINEL, jnp.int32).at[flat].set(
+        keys.astype(jnp.int32)[order], mode="drop").reshape(buckets, cap)
+    bv = jnp.full((buckets * cap,), -1, jnp.int32).at[flat].set(
+        vals.astype(jnp.int32)[order], mode="drop").reshape(buckets, cap)
+    return bk, bv, jnp.any(counts > cap)
+
+
+@partial(jax.jit, static_argnames=("blk", "cap", "interpret", "use_kernel"))
+def hash_join_probe(probe_keys: jax.Array, build_keys: jax.Array,
+                    build_vals: jax.Array, blk: int = 2048, cap: int = 8,
+                    interpret: bool = True, use_kernel: bool = True):
+    """End-to-end probe: returns (matched row idx or -1, build overflowed).
+
+    VMEM budget: the (B, C) tables must fit resident — B*C*8 bytes; with the
+    default C=8 and B = 2*next_pow2(m)/C this is ~16 bytes per build row.
+    """
+    if not use_kernel:
+        return hash_probe_ref(probe_keys, build_keys, build_vals), jnp.asarray(False)
+    m = build_keys.shape[0]
+    buckets = max(128, _next_pow2(2 * max(1, m)) // cap)
+    bk, bv, ov = build_bucket_table(build_keys, build_vals, buckets, cap)
+    n = probe_keys.shape[0]
+    blk = min(blk, max(8, (n + 7) // 8 * 8))
+    npad = (n + blk - 1) // blk * blk
+    pk = jnp.full((npad,), SENTINEL, jnp.int32).at[:n].set(
+        probe_keys.astype(jnp.int32))
+    out = hash_probe_pallas(pk, bk, bv, blk=blk, interpret=interpret)
+    return out[:n], ov
+
+
+def hash_join_probe_auto(probe_keys, build_keys, build_vals, cap: int = 8,
+                         max_tries: int = 4, **kw):
+    """Host-level capacity escalation: double bucket capacity on overflow.
+
+    This is the same re-execution discipline the fault-tolerant query runner
+    applies to shuffle overflow (paper §2.4: fault tolerance by re-execution)."""
+    for _ in range(max_tries):
+        out, ov = hash_join_probe(probe_keys, build_keys, build_vals,
+                                  cap=cap, **kw)
+        if not bool(ov):
+            return out, cap
+        cap *= 2
+    raise RuntimeError(f"bucket overflow persists at cap={cap}")

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: sorted-build searchsorted probe (the engine's own join)."""
+import jax.numpy as jnp
+
+
+def hash_probe_ref(probe_keys, build_keys, build_vals):
+    """probe (n,), build (m,) unique int32 -> matched build_vals or -1."""
+    order = jnp.argsort(build_keys)
+    sk = build_keys[order]
+    sv = build_vals[order]
+    pos = jnp.clip(jnp.searchsorted(sk, probe_keys), 0, sk.shape[0] - 1)
+    hit = sk[pos] == probe_keys
+    return jnp.where(hit, sv[pos], -1).astype(jnp.int32)

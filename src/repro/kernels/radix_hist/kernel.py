@@ -1,0 +1,62 @@
+"""Radix-partition histogram kernel — shuffle capacity planning / skew stats.
+
+For each row block, hash the (int32) key in-kernel and produce a per-block
+partition histogram (nblocks, P).  The per-block resolution is what the
+adaptive capacity planner and the skew monitor consume (paper §3.5: shuffle
+time = max over nodes of send/recv bytes — per-block histograms expose that
+before any data moves).
+
+TPU adaptation: splitmix64 needs 64-bit integer multiplies the VPU lacks, so
+the in-kernel hash is the murmur3 32-bit finalizer (documented in DESIGN.md).
+Histogram accumulation is a one-hot + MXU matmul, like segsum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def murmur32(k: jax.Array) -> jax.Array:
+    """murmur3 fmix32 — vector-friendly 32-bit finalizer."""
+    k = k.astype(jnp.uint32)
+    k = k ^ (k >> 16)
+    k = k * jnp.uint32(0x85EBCA6B)
+    k = k ^ (k >> 13)
+    k = k * jnp.uint32(0xC2B2AE35)
+    k = k ^ (k >> 16)
+    return k
+
+
+def _kernel(key_ref, out_ref, *, blk: int, parts: int, width: int):
+    k = murmur32(key_ref[...])                            # (blk, 1) u32
+    pid = (k % jnp.uint32(parts)).astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (blk, width), 1)
+    onehot = (pid == iota).astype(jnp.float32)
+    ones = jnp.ones((blk, 1), jnp.float32)
+    hist = jax.lax.dot_general(onehot, ones,
+                               dimension_numbers=(((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (W, 1)
+    out_ref[...] = hist.T                                  # (1, W)
+
+
+def radix_hist_pallas(keys: jax.Array, parts: int, width: int | None = None,
+                      blk: int = 2048, interpret: bool = False) -> jax.Array:
+    """keys (n,) int32 -> per-block histograms (n//blk, width) float32.
+
+    ``parts`` is the hash modulo; ``width`` (>= parts, default 128-padded) is
+    the lane-aligned output width — columns beyond parts stay zero."""
+    n = keys.shape[0]
+    width = width or max(128, (parts + 127) // 128 * 128)
+    assert n % blk == 0 and width >= parts
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_kernel, blk=blk, parts=parts, width=width),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n // blk, width), jnp.float32),
+        interpret=interpret,
+    )(keys.reshape(n, 1).astype(jnp.int32))

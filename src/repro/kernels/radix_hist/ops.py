@@ -1,0 +1,52 @@
+"""Public wrapper: padding + global/per-block histograms + skew stats."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import radix_hist_pallas
+from .ref import radix_hist_ref
+
+_LANES = 128
+
+
+@partial(jax.jit, static_argnames=("parts", "blk", "interpret", "use_kernel"))
+def radix_hist(keys: jax.Array, parts: int, blk: int = 2048,
+               interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+    """Per-block partition histograms (ceil(n/blk), parts).
+
+    Padding rows hash to arbitrary partitions, so they are excluded by
+    hashing a sentinel lane and subtracting its count — simpler: we pad with
+    the first key so totals stay exact after subtracting the pad count from
+    that key's partition (done below).
+    """
+    n = keys.shape[0]
+    width = max(_LANES, (parts + _LANES - 1) // _LANES * _LANES)
+    blk = min(blk, max(8, (n + 7) // 8 * 8))
+    npad = (n + blk - 1) // blk * blk
+    pad = npad - n
+    k2 = jnp.concatenate([keys.astype(jnp.int32),
+                          jnp.broadcast_to(keys[:1].astype(jnp.int32), (pad,))])
+    if use_kernel:
+        hist = radix_hist_pallas(k2, parts, width=width, blk=blk,
+                                 interpret=interpret)
+    else:
+        hist = radix_hist_ref(k2, parts, blk)
+    # subtract the duplicated pad rows from the last block
+    if pad:
+        from .kernel import murmur32
+        p0 = (murmur32(keys[:1].astype(jnp.int32)) %
+              jnp.uint32(parts)).astype(jnp.int32)
+        hist = hist.at[-1, p0[0]].add(-float(pad))
+    return hist[:, :parts]
+
+
+def skew_stats(keys: jax.Array, parts: int, **kw) -> dict:
+    """Paper §3.5 inputs: per-partition totals + max/mean imbalance."""
+    h = radix_hist(keys, parts, **kw)
+    tot = h.sum(axis=0)
+    mean = jnp.maximum(tot.mean(), 1e-9)
+    return {"per_partition": tot, "max": tot.max(),
+            "imbalance": tot.max() / mean}

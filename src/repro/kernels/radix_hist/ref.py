@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the radix histogram kernel."""
+import jax
+import jax.numpy as jnp
+
+from .kernel import murmur32
+
+
+def radix_hist_ref(keys: jax.Array, parts: int, blk: int) -> jax.Array:
+    n = keys.shape[0]
+    pid = (murmur32(keys.astype(jnp.int32)) % jnp.uint32(parts)).astype(jnp.int32)
+    blocks = pid.reshape(n // blk, blk)
+    return jax.vmap(lambda b: jnp.bincount(b, length=parts))(blocks).astype(
+        jnp.float32)

@@ -1,0 +1,45 @@
+"""Public wrapper: padding, alignment, interpret switch, CPU fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_pallas
+from .ref import segment_sum_ref
+
+_LANES = 128
+
+
+def _pad_to(x: int, m: int) -> int:
+    return max(m, (x + m - 1) // m * m)
+
+
+@partial(jax.jit, static_argnames=("groups", "blk", "interpret", "use_kernel"))
+def segment_sum(gids: jax.Array, values: jax.Array, groups: int,
+                blk: int = 1024, interpret: bool = True,
+                use_kernel: bool = True) -> jax.Array:
+    """Grouped sum with MXU one-hot kernel; shapes auto-padded to tiles.
+
+    values may be (n,) or (n, C).  Padding rows route to a dead group beyond
+    ``groups`` and are sliced away.  With use_kernel=False the jnp oracle runs
+    (the production config flips this on non-TPU backends).
+    """
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    n, c = values.shape
+    if not use_kernel:
+        return (segment_sum_ref(gids, values, groups)[:, 0] if squeeze
+                else segment_sum_ref(gids, values, groups))
+    gpad = _pad_to(groups + 1, _LANES)        # +1 dead group for padding rows
+    cpad = _pad_to(c, _LANES)
+    blk = min(blk, _pad_to(n, 8))
+    npad = _pad_to(n, blk)
+    g2 = jnp.full((npad,), gpad - 1, jnp.int32).at[:n].set(gids.astype(jnp.int32))
+    v2 = jnp.zeros((npad, cpad), jnp.float32).at[:n, :c].set(
+        values.astype(jnp.float32))
+    out = segment_sum_pallas(g2, v2, gpad, blk=blk, interpret=interpret)
+    out = out[:groups, :c]
+    return out[:, 0] if squeeze else out

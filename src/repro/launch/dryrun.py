@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  eval_shape the train/serve step against ShapeDtypeStruct
+inputs (no allocation), attach the production shardings, .lower().compile(),
+then extract memory_analysis / cost_analysis / collective bytes (HLO parse)
+into results/dryrun/<cell>.json for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --all               # every cell, resumable
+  python -m repro.launch.dryrun --arch qwen1_5_110b --shape train_4k --multi-pod
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, cell_enabled, get_config, input_specs
+from repro.distributed import hlo_analysis as ha
+from repro.distributed.shardings import (MeshAxes, batch_specs, cache_specs,
+                                         make_constrain, named, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import Model
+from repro.train import optimizer as optim
+from repro.train.trainstep import (init_train_state, make_decode_step,
+                                   make_prefill_step, make_train_step)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def model_flops(cfg, shape_id: int, batch: int, seq: int) -> float:
+    n = cfg.active_param_count or cfg.param_count
+    kind = SHAPES[shape_id][2]
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch          # decode: one token
+
+
+def _spec_tree_to_named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dryrun_cell(arch_id: str, shape_id: str, multi_pod: bool,
+                remat: str = "full", constrain_acts: bool = True,
+                bf16_norms: bool = False, seq_parallel: bool = False,
+                grad_compress: str = "none", microbatches: int = 1,
+                tp: int = 16, serve_sharding: bool = False,
+                tag: str = "") -> dict:
+    import dataclasses as _dc
+    seq, batch, kind = SHAPES[shape_id]
+    cfg = get_config(arch_id)
+    if bf16_norms:
+        cfg = _dc.replace(cfg, norms_f32=False)
+    mesh = make_production_mesh(multi_pod=multi_pod, tp=tp)
+    axes = MeshAxes(fsdp=("pod", "data") if multi_pod else ("data",),
+                    tp="model")
+    tp_size = mesh.shape["model"]
+    model = Model(cfg, expert_pad=tp_size, vocab_pad=128, remat=remat,
+                  constrain=make_constrain(mesh, axes, seq_parallel)
+                  if constrain_acts else (lambda x, k: x))
+
+    key = jax.random.PRNGKey(0)
+    p_struct = jax.eval_shape(lambda: model.init(key, dtype=jnp.bfloat16))
+    # serving: weight-stationary params (TP-only; no per-step FSDP gathers)
+    p_axes = MeshAxes(fsdp=(), tp="model") if serve_sharding else axes
+    p_specs = param_specs(p_struct, p_axes)
+    in_spec = input_specs(cfg, shape_id)
+    rec = {"arch": arch_id, "shape": shape_id,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": mesh.devices.size, "kind": kind}
+
+    with mesh:
+        if kind == "train":
+            ocfg = optim.AdamWConfig()
+            step = make_train_step(model, ocfg, grad_compress,
+                                   microbatches=microbatches)
+            s_struct = jax.eval_shape(
+                lambda p: init_train_state(model, p, grad_compress), p_struct)
+            s_specs = {"opt": {"step": P(),
+                               "m": param_specs(s_struct["opt"]["m"], axes),
+                               "v": param_specs(s_struct["opt"]["v"], axes)}}
+            if grad_compress == "int8_ef":
+                s_specs["ef"] = param_specs(s_struct["ef"], axes)
+            b_specs = batch_specs(axes, in_spec)
+            fn = jax.jit(
+                step,
+                in_shardings=(_spec_tree_to_named(mesh, p_specs),
+                              _spec_tree_to_named(mesh, s_specs),
+                              _spec_tree_to_named(mesh, b_specs)),
+                out_shardings=(_spec_tree_to_named(mesh, p_specs),
+                               _spec_tree_to_named(mesh, s_specs),
+                               None),
+                donate_argnums=(0, 1))
+            args = (p_struct, s_struct, in_spec)
+        elif kind == "prefill":
+            cache_len = seq + (cfg.n_prefix if cfg.frontend == "vision_patches"
+                               else 0)
+            fn_ = make_prefill_step(model, batch, cache_len)
+            c_struct = jax.eval_shape(
+                lambda: model.init_cache(batch, cache_len, dtype=jnp.bfloat16))
+            c_specs = cache_specs(cfg, c_struct, axes, batch,
+                                  dict(mesh.shape))
+            b_specs = batch_specs(axes, in_spec)
+            dp = axes.dp() if len(axes.dp()) > 1 else axes.dp()[0]
+            fn = jax.jit(
+                fn_,
+                in_shardings=(_spec_tree_to_named(mesh, p_specs),
+                              _spec_tree_to_named(mesh, b_specs)),
+                out_shardings=(NamedSharding(mesh, P(dp, None, "model")),
+                               _spec_tree_to_named(mesh, c_specs)))
+            args = (p_struct, in_spec)
+        else:  # decode
+            fn_ = make_decode_step(model)
+            c_struct = jax.eval_shape(
+                lambda: model.init_cache(batch, seq, dtype=jnp.bfloat16))
+            c_specs = cache_specs(cfg, c_struct, axes, batch,
+                                  dict(mesh.shape))
+            dp = axes.dp() if len(axes.dp()) > 1 else axes.dp()[0]
+            tok_spec = P(dp, None) if batch >= mesh.devices.size // tp_size \
+                else P(None, None)
+            pos = jax.ShapeDtypeStruct((), np.int32)
+            fn = jax.jit(
+                fn_,
+                in_shardings=(_spec_tree_to_named(mesh, p_specs),
+                              NamedSharding(mesh, tok_spec),
+                              _spec_tree_to_named(mesh, c_specs),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, P(*tok_spec, "model")),
+                               _spec_tree_to_named(mesh, c_specs)),
+                donate_argnums=(2,))
+            args = (p_struct, in_spec["token"], c_struct, pos)
+
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:   # backend may not support it
+            rec["memory"] = {"error": str(e)}
+        cost = compiled.cost_analysis() or {}
+        rec["cost_analysis_flops"] = float(cost.get("flops", 0.0))
+        rec["cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+
+        hlo = compiled.as_text()
+        # loop-aware accounting (cost_analysis counts while bodies once)
+        mod = ha.analyze_module(hlo)
+        rec["hlo_flops"] = mod["flops"]
+        rec["hlo_bytes"] = mod["traffic_bytes"]
+        rec["collective_bytes"] = mod["collective_bytes"]
+        rec["collective_count"] = mod["collective_count"]
+        rec["op_histogram"] = ha.op_histogram(hlo)
+        rec["hlo_len"] = len(hlo)
+        hlo_dir = os.path.join(RESULTS, "..", "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        sfx = f"_{tag}" if tag else ""
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch_id}__{shape_id}__{rec['mesh']}{sfx}.hlo.gz"),
+                "wt") as f:
+            f.write(hlo)
+
+        mf = model_flops(cfg, shape_id, batch, seq)
+        rec["roofline"] = ha.roofline_terms(
+            rec["hlo_flops"], rec["hlo_bytes"],
+            sum(mod["collective_bytes"].values()),
+            mesh.devices.size, model_flops=mf)
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--bf16-norms", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--serve-sharding", action="store_true")
+    ap.add_argument("--grad-compress", default="none")
+    ap.add_argument("--no-constrain", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(RESULTS, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                ok, why = cell_enabled(cfg, shape)
+                if ok:
+                    cells.append((arch, shape, False))
+                else:
+                    _write(arch, shape, "16x16", {"ok": False, "skipped": why,
+                                                  "arch": arch, "shape": shape,
+                                                  "mesh": "16x16"}, args.tag)
+                    _write(arch, shape, "2x16x16",
+                           {"ok": False, "skipped": why, "arch": arch,
+                            "shape": shape, "mesh": "2x16x16"}, args.tag)
+        # multi-pod pass: every enabled cell again on the 2x16x16 mesh
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in SHAPES:
+                ok, _ = cell_enabled(cfg, shape)
+                if ok:
+                    cells.append((arch, shape, True))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        out = _path(arch, shape, mesh_name, args.tag)
+        if os.path.exists(out) and not args.force:
+            print(f"skip (exists): {out}", flush=True)
+            continue
+        print(f"=== {arch} x {shape} x {mesh_name}", flush=True)
+        try:
+            rec = dryrun_cell(arch, shape, mp, remat=args.remat,
+                              constrain_acts=not args.no_constrain,
+                              bf16_norms=args.bf16_norms,
+                              seq_parallel=args.seq_parallel,
+                              grad_compress=args.grad_compress,
+                              microbatches=args.microbatch,
+                              tp=args.tp, serve_sharding=args.serve_sharding,
+                              tag=args.tag)
+            print(json.dumps({k: rec[k] for k in
+                              ("hlo_flops", "hlo_bytes", "compile_s")},
+                             indent=None), flush=True)
+        except Exception as e:
+            rec = {"ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:],
+                   "arch": arch, "shape": shape, "mesh": mesh_name}
+            print("FAILED:", rec["error"], flush=True)
+        _write(arch, shape, mesh_name, rec, args.tag)
+
+
+def _path(arch, shape, mesh_name, tag=""):
+    sfx = f"_{tag}" if tag else ""
+    return os.path.join(RESULTS, f"{arch}__{shape}__{mesh_name}{sfx}.json")
+
+
+def _write(arch, shape, mesh_name, rec, tag=""):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(_path(arch, shape, mesh_name, tag), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before any
+jax initialization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, tp: int = 16):
+    """16x16 chips per pod; 2 pods when multi_pod (512 chips).
+
+    ``tp`` re-splits the 256-chip pod between data and model axes — serving
+    prefers small TP (per-token all-reduce latency scales with TP)."""
+    assert 256 % tp == 0
+    dp = 256 // tp
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_analytics_mesh(*, multi_pod: bool = False):
+    """Analytics uses a flat exchange axis: pod x data for multi-pod."""
+    shape = (2, 256) if multi_pod else (256,)
+    axes = ("pod", "data") if multi_pod else ("data",)
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_local_mesh(n: int | None = None, axis: str = "data"):
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))

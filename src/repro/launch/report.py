@@ -1,0 +1,109 @@
+"""Reduce results/dryrun/*.json into the EXPERIMENTS.md §Dry-run/§Roofline
+tables (markdown on stdout).
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun")
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def _file_tag(path: str) -> str:
+    base = os.path.basename(path)[:-5]
+    parts = base.split("__")
+    mesh_tag = parts[2] if len(parts) > 2 else ""
+    for m in ("2x16x16", "16x16"):
+        if mesh_tag.startswith(m):
+            return mesh_tag[len(m):].lstrip("_")
+    return ""
+
+
+def load(mesh: str | None = None, tag: str = ""):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        if _file_tag(f) != tag:
+            continue
+        r = json.load(open(f))
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_table(recs):
+    print("| arch | shape | mesh | bottleneck | compute | memory | collective"
+          " | step LB | roofline | useful FLOPs | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"*skipped* | - | - | - | - | - | - | {r['skipped'][:46]} |")
+            continue
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAILED** "
+                  f"| - | - | - | - | - | - | {r.get('error', '')[:40]} |")
+            continue
+        rf = r["roofline"]
+        cc = r.get("collective_count", {})
+        cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in
+                        sorted(cc.items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {rf['bottleneck']} "
+              f"| {rf['compute_s'] * 1e3:.1f}ms "
+              f"| {rf['memory_s'] * 1e3:.1f}ms "
+              f"| {rf['collective_s'] * 1e3:.1f}ms "
+              f"| {rf['step_lower_bound_s'] * 1e3:.1f}ms "
+              f"| {100 * rf.get('roofline_frac', 0):.1f}% "
+              f"| {100 * rf.get('useful_flop_frac', 0):.0f}% "
+              f"| {cstr} |")
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | compile | HLO flops/dev | traffic/dev |"
+          " collective bytes/dev | temp bytes | arg bytes |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        mem = r.get("memory", {})
+        cb = sum(r.get("collective_bytes", {}).values())
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r.get('compile_s', 0):.0f}s "
+              f"| {r['hlo_flops']:.2e} | {fmt_bytes(r['hlo_bytes'])} "
+              f"| {fmt_bytes(cb)} "
+              f"| {fmt_bytes(mem.get('temp_bytes'))} "
+              f"| {fmt_bytes(mem.get('argument_bytes'))} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--section", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = load(args.mesh, args.tag)
+    if args.section == "roofline":
+        roofline_table(recs)
+    else:
+        dryrun_table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Assigned-architecture model zoo (functional JAX; see transformer.Model)."""
+from .common import ArchConfig
+from .transformer import Model
+
+__all__ = ["ArchConfig", "Model"]

@@ -1,0 +1,220 @@
+"""Attention variants: GQA/MQA (+RoPE, optional bias), MLA, prefix-LM masks.
+
+Train/prefill operate on full (B, S, D); decode consumes one token against a
+static-capacity KV cache (B, L, KV, hd) updated in place — the cache layout
+keeps the sequence dim explicit so the serving layer can shard it across the
+``data`` axis for long-context flash-decode (GSPMD inserts the partial-softmax
+all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa
+from .common import ArchConfig, KeyGen, apply_rope, dense_init, rms_norm
+
+F32 = jnp.float32
+
+
+def _at_pos(cache_arr, update, pos):
+    """dynamic_update_slice at (0, pos, 0, ...) with int32-safe indices."""
+    idx = [jnp.asarray(0, jnp.int32)] * cache_arr.ndim
+    idx[1] = jnp.asarray(pos, jnp.int32)
+    return jax.lax.dynamic_update_slice(cache_arr,
+                                        update.astype(cache_arr.dtype), idx)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg: ArchConfig, kg: KeyGen, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": dense_init(kg(), (d, h * hd), dtype),
+        "wk": dense_init(kg(), (d, kv * hd), dtype),
+        "wv": dense_init(kg(), (d, kv * hd), dtype),
+        "wo": dense_init(kg(), (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg: ArchConfig, x, positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,S,H,hd), k/v (B,L,KV,hd), mask (B,S,L) or None broadcastable."""
+    b, s, h, hd = q.shape
+    _, l, kv, _ = k.shape
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", q.astype(F32), k.astype(F32)) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsl,blkd->bskgd", w, v.astype(F32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def causal_mask(b, s, n_prefix: int = 0):
+    i = jnp.arange(s, dtype=jnp.int32)[:, None]
+    j = jnp.arange(s, dtype=jnp.int32)[None, :]
+    m = j <= i
+    if n_prefix:
+        m = m | (j < n_prefix)          # prefix-LM: bidirectional prefix
+    return jnp.broadcast_to(m, (b, s, s))
+
+
+def gqa_forward(p, cfg: ArchConfig, x, positions, n_prefix: int = 0,
+                use_flash_kernel: bool = False):
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if use_flash_kernel and n_prefix == 0:
+        # TPU path: Pallas blocked online-softmax kernel (DESIGN.md §6)
+        o = fa.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), causal=True)
+        o = o.transpose(0, 2, 1, 3)
+    else:
+        o = _sdpa(q, k, v, causal_mask(b, s, n_prefix), 1.0 / (cfg.hd ** 0.5))
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+
+
+def gqa_prefill(p, cfg: ArchConfig, x, positions, cache, n_prefix: int = 0):
+    """Full forward + write the cache prefix."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    cache = {"k": _at_pos(cache["k"], k, 0), "v": _at_pos(cache["v"], v, 0)}
+    o = _sdpa(q, k, v, causal_mask(b, s, n_prefix), 1.0 / (cfg.hd ** 0.5))
+    return o.reshape(b, s, -1) @ p["wo"], cache
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache, pos):
+    """x (B, 1, D); pos scalar int32 — attend over cache[: pos+1]."""
+    b, _, _ = x.shape
+    l = cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, positions)
+    ck = _at_pos(cache["k"], k, pos)
+    cv = _at_pos(cache["v"], v, pos)
+    mask = (jnp.arange(l, dtype=jnp.int32)[None, None, :] <= pos)
+    mask = jnp.broadcast_to(mask, (b, 1, l))
+    o = _sdpa(q, ck, cv, mask, 1.0 / (cfg.hd ** 0.5))
+    return o.reshape(b, 1, -1) @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank KV compression; cache stores the latent only
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ArchConfig, kg: KeyGen, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p = {
+        "wq_a": dense_init(kg(), (d, cfg.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((cfg.q_lora_rank,), dtype),
+        "wq_b": dense_init(kg(), (cfg.q_lora_rank, h * qd), dtype),
+        "wkv_a": dense_init(kg(), (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(kg(), (cfg.kv_lora_rank,
+                                   h * (cfg.qk_nope_dim + cfg.v_head_dim)), dtype),
+        "wo": dense_init(kg(), (h * cfg.v_head_dim, d), dtype),
+    }
+    return p
+
+
+def _mla_qkv(p, cfg: ArchConfig, x, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps,
+                 cfg.norms_f32) @ p["wq_b"]
+    q = q.reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps,
+                    cfg.norms_f32)
+    k_rope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_theta)                     # (B,S,1,rd) shared
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, mask):
+    """Expand latent -> per-head k/v and attend (B,S,*) vs (B,L,*)."""
+    b, s, h = q_nope.shape[0], q_nope.shape[1], cfg.n_heads
+    l = c_kv.shape[1]
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kv = (c_kv @ p["wkv_b"]).reshape(b, l, h, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    scale = 1.0 / ((nd + rd) ** 0.5)
+    s_nope = jnp.einsum("bshd,blhd->bhsl", q_nope.astype(F32),
+                        k_nope.astype(F32))
+    s_rope = jnp.einsum("bshd,blkd->bhsl", q_rope.astype(F32),
+                        k_rope.astype(F32))                 # k broadcast (kv=1)
+    scores = (s_nope + s_rope) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhsl,blhd->bshd", w, v.astype(F32)).astype(q_nope.dtype)
+    return o.reshape(b, s, h * vd) @ p["wo"]
+
+
+def mla_forward(p, cfg: ArchConfig, x, positions, n_prefix: int = 0,
+                use_flash_kernel: bool = False):
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    return _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                       causal_mask(b, s, n_prefix))
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, 1, cfg.qk_rope_dim), dtype)}
+
+
+def mla_prefill(p, cfg, x, positions, cache, n_prefix: int = 0):
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    cache = {"ckv": _at_pos(cache["ckv"], c_kv, 0),
+             "krope": _at_pos(cache["krope"], k_rope, 0)}
+    o = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                    causal_mask(b, s, n_prefix))
+    return o, cache
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    b = x.shape[0]
+    l = cache["ckv"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    ckv = _at_pos(cache["ckv"], c_kv, pos)
+    krope = _at_pos(cache["krope"], k_rope, pos)
+    mask = jnp.broadcast_to(
+        jnp.arange(l, dtype=jnp.int32)[None, None, :] <= pos, (b, 1, l))
+    o = _mla_attend(p, cfg, q_nope, q_rope, ckv, krope, mask)
+    return o, {"ckv": ckv, "krope": krope}

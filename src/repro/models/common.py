@@ -1,0 +1,161 @@
+"""Shared model substrate: config, norms, RoPE, activations, init.
+
+Plain functional style (params are nested dicts of jnp arrays) so the
+distribution layer can attach PartitionSpecs by tree path.  All constructors
+take explicit dtypes — x64 is globally enabled for the SQL engine, so nothing
+here may rely on default dtype promotion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DType = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact public config; see repro.configs)."""
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    act: str = "swiglu"           # swiglu | geglu
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    embed_scale: bool = False     # gemma-style sqrt(d) embedding multiplier
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    first_dense_layers: int = 0   # deepseek: first layer is dense
+    # MLA (deepseek)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    shared_attn_every: int = 0    # zamba2: shared attn block cadence
+    # modality frontend stubs
+    frontend: str | None = None   # None | "vision_patches" | "audio_frames"
+    n_prefix: int = 0             # vision: number of patch embeddings
+    # attention variant
+    prefix_lm: bool = False       # paligemma: bidirectional prefix
+    sub_quadratic: bool = False   # eligible for long_500k
+    param_count: float = 0.0      # nominal N for MODEL_FLOPS (6ND)
+    active_param_count: float = 0.0  # MoE: active params per token
+    # numerics: f32 norm chains are the baseline; bf16 norms halve the
+    # activation-sized collective/HBM traffic (perf-iteration lever)
+    norms_f32: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2 + (2 if self.shared_attn_every else 0)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256,
+            d_ff_expert=min(self.d_ff_expert, 64) if self.d_ff_expert else 0,
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 8) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            q_lora_rank=min(self.q_lora_rank, 64) if self.q_lora_rank else 0,
+            kv_lora_rank=min(self.kv_lora_rank, 32) if self.kv_lora_rank else 0,
+            qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            shared_attn_every=min(self.shared_attn_every, 2)
+            if self.shared_attn_every else 0,
+            n_prefix=min(self.n_prefix, 8) if self.n_prefix else 0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float,
+             in_f32: bool = True) -> jax.Array:
+    dt = x.dtype
+    if in_f32:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = (x * jax.lax.rsqrt(var + jnp.asarray(eps, x.dtype))) * \
+        (1.0 + scale.astype(x.dtype))
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, D); positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def glu_act(x_gate: jax.Array, x_up: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(x_gate) * x_up
+    if kind == "geglu":
+        return jax.nn.gelu(x_gate, approximate=True) * x_up
+    raise ValueError(kind)
+
+
+def dense_init(key, shape: Sequence[int], dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+class KeyGen:
+    """Split keys by name for readable param init."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (B, S, V) any float dtype; labels (B, S) int32; mean nats."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    gold = jnp.take_along_axis(shifted, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts with capacity-bounded sort-based dispatch.
+
+The dispatch is the SAME primitive as the SQL shuffle
+(``repro.core.exchange._dispatch_offsets``): rank tokens by destination
+(expert) with a stable sort, place into (E, C) capacity buckets, drop on
+overflow.  This is the deepest contact between the paper's technique and the
+MoE architectures — a distributed SQL shuffle *is* a token dispatch with a
+data-dependent routing function (DESIGN.md §3).  With experts sharded over the
+``model`` axis, GSPMD lowers the gather->expert-matmul->scatter into the same
+all-to-all pattern NCCL would run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exchange import _dispatch_offsets
+from .common import ArchConfig, KeyGen, dense_init, glu_act
+
+F32 = jnp.float32
+
+
+def init_moe(cfg: ArchConfig, kg: KeyGen, dtype, padded_experts: int):
+    d, fe = cfg.d_model, cfg.d_ff_expert
+    e = padded_experts
+    p = {
+        "router": dense_init(kg(), (d, e), dtype, scale=0.02),
+        "w_gate": dense_init(kg(), (e, d, fe), dtype),
+        "w_up": dense_init(kg(), (e, d, fe), dtype),
+        "w_down": dense_init(kg(), (e, fe, d), dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff_expert * cfg.n_shared_experts
+        p["shared_gate"] = dense_init(kg(), (d, fs), dtype)
+        p["shared_up"] = dense_init(kg(), (d, fs), dtype)
+        p["shared_down"] = dense_init(kg(), (fs, d), dtype)
+    return p
+
+
+def moe_forward(p, cfg: ArchConfig, x: jax.Array, padded_experts: int,
+                capacity_factor: float = 1.25):
+    """x (B, S, D) -> (B, S, D).  Top-k routing, capacity drop, shared experts.
+
+    Returns (out, aux) where aux carries the load-balancing loss terms and the
+    drop fraction (the skew statistic — same role as the shuffle's overflow)."""
+    b, s, d = x.shape
+    e, k = padded_experts, cfg.top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(F32)
+    if e > cfg.n_experts:   # mask padding experts (divisibility padding)
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                       # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # -- capacity dispatch (shared machinery with the SQL shuffle) ----------
+    cap = max(8, int(t * k * capacity_factor / e + 0.999) // 8 * 8 + 8)
+    dest = top_e.reshape(t * k).astype(jnp.int32)                # (T*k,)
+    slot, counts = _dispatch_offsets(dest, e, t * k)
+    keep = slot < cap
+    flat = jnp.where(keep, dest * cap + jnp.minimum(slot, cap - 1), e * cap)
+    token_of = jnp.arange(t * k, dtype=jnp.int32) // k
+    # token index per (expert, capacity) slot; empty slots -> token 0, weight 0
+    slot_token = jnp.zeros((e * cap,), jnp.int32).at[flat].set(
+        token_of, mode="drop")
+    slot_used = jnp.zeros((e * cap,), jnp.bool_).at[flat].set(
+        keep, mode="drop")
+    gathered = xt[slot_token].reshape(e, cap, d)
+    gathered = jnp.where(slot_used.reshape(e, cap, 1), gathered, 0.0)
+
+    h = glu_act(jnp.einsum("ecd,edf->ecf", gathered, p["w_gate"]),
+                jnp.einsum("ecd,edf->ecf", gathered, p["w_up"]), cfg.act)
+    out_ec = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * cap, d)
+
+    w_flat = top_w.reshape(t * k)
+    slot_w = jnp.zeros((e * cap,), F32).at[flat].set(
+        jnp.where(keep, w_flat, 0.0), mode="drop")
+    out = jnp.zeros((t, d), x.dtype).at[slot_token].add(
+        (out_ec.astype(F32) * slot_w[:, None]).astype(x.dtype),
+        mode="drop")
+    # note: empty slots carry weight 0 so their token-0 scatter is a no-op
+
+    if cfg.n_shared_experts:
+        out = out + glu_act(xt @ p["shared_gate"], xt @ p["shared_up"],
+                            cfg.act) @ p["shared_down"]
+
+    # load-balancing aux (GShard): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), F32).at[dest].add(1.0 / (t * k))
+    aux = {"lb_loss": e * jnp.sum(me * ce),
+           "drop_frac": 1.0 - keep.mean(),
+           "expert_load": counts}
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,227 @@
+"""Sub-quadratic mixers: Mamba2 (zamba2 hybrid) and RWKV6 "Finch".
+
+Both are O(S) in sequence length with O(1) decode state — the two assigned
+architectures that run the long_500k shape.  Training uses lax.scan over time
+(a chunked Pallas kernel is the obvious TPU follow-up; the scan keeps HLO size
+flat and the roofline honest); decode is a single fused state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, dense_init
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def _m2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = 64
+    heads = d_inner // hd
+    return d_inner, heads, hd
+
+
+def init_mamba2(cfg: ArchConfig, kg: KeyGen, dtype):
+    d = cfg.d_model
+    d_inner, heads, hd = _m2_dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n
+    return {
+        "w_in": dense_init(kg(), (d, 2 * d_inner + 2 * n + heads), dtype),
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((heads,), F32),
+        "dt_bias": jnp.zeros((heads,), F32),
+        "d_skip": jnp.ones((heads,), F32),
+        "w_out": dense_init(kg(), (d_inner, d), dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, state=None):
+    """x (B, S, C); w (K, C) depthwise causal; state (B, K-1, C) carry-in."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b), xp[:, -(k - 1):]
+
+
+def _m2_split(cfg, zxbcdt):
+    d_inner, heads, hd = _m2_dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = zxbcdt[..., -heads:]
+    return z, xbc, dt
+
+
+def mamba2_forward(p, cfg: ArchConfig, x, conv_state=None, ssm_state=None):
+    """x (B, S, D) -> (B, S, D); returns (y, (conv_state, ssm_state))."""
+    b, s, d = x.shape
+    d_inner, heads, hd = _m2_dims(cfg)
+    n = cfg.ssm_state
+    z, xbc, dt = _m2_split(cfg, x @ p["w_in"])
+    xbc, conv_out = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"],
+                                           conv_state)
+    xs = xbc[..., :d_inner].reshape(b, s, heads, hd)
+    bmat = xbc[..., d_inner:d_inner + n]                     # (B,S,N)
+    cmat = xbc[..., d_inner + n:]                            # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])      # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                 # (H,)
+    decay = jnp.exp(dt * a)                                  # (B,S,H)
+
+    def step(h, inp):
+        xs_t, b_t, c_t, dt_t, dec_t = inp
+        # h (B,H,hd,N): h' = dec*h + dt * xs ⊗ b
+        h = h * dec_t[..., None, None] + \
+            (dt_t[..., None] * xs_t.astype(F32))[..., None] * \
+            b_t[:, None, None, :].astype(F32)
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t.astype(F32))
+        return h, y
+
+    h0 = ssm_state if ssm_state is not None else \
+        jnp.zeros((b, heads, hd, n), F32)
+    xseq = (xs.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+            cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+            decay.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xseq)
+    y = ys.transpose(1, 0, 2, 3)                             # (B,S,H,hd)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(F32)
+    y = (y.reshape(b, s, d_inner) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    return y @ p["w_out"], (conv_out, h_final)
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype):
+    d_inner, heads, hd = _m2_dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n
+    return (jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+            jnp.zeros((batch, heads, hd, n), F32))
+
+
+def mamba2_decode(p, cfg: ArchConfig, x, state):
+    """x (B, 1, D); state from init_mamba2_state; O(1) per token."""
+    y, state = mamba2_forward(p, cfg, x, conv_state=state[0], ssm_state=state[1])
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) — data-dependent decay
+# ---------------------------------------------------------------------------
+
+_RWKV_HD = 64
+
+
+def init_rwkv6(cfg: ArchConfig, kg: KeyGen, dtype):
+    d = cfg.d_model
+    heads = d // _RWKV_HD
+    lora = 64
+    return {
+        # token-shift mixing coefficients per stream
+        "mu_r": jnp.zeros((d,), dtype), "mu_k": jnp.zeros((d,), dtype),
+        "mu_v": jnp.zeros((d,), dtype), "mu_w": jnp.zeros((d,), dtype),
+        "mu_g": jnp.zeros((d,), dtype),
+        "wr": dense_init(kg(), (d, d), dtype),
+        "wk": dense_init(kg(), (d, d), dtype),
+        "wv": dense_init(kg(), (d, d), dtype),
+        "wg": dense_init(kg(), (d, d), dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -5.0, F32),
+        "w_a": dense_init(kg(), (d, lora), dtype),
+        "w_b": dense_init(kg(), (lora, d), dtype, scale=0.02),
+        "u": jnp.zeros((heads, _RWKV_HD), F32),   # bonus for current token
+        "ln_scale": jnp.ones((d,), F32),
+        "wo": dense_init(kg(), (d, d), dtype),
+    }
+
+
+def _rwkv_streams(p, x, x_prev):
+    """Token shift: mix current and previous token per channel."""
+    b, s, d = x.shape
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+    def mix(mu):
+        return x + (shifted - x) * mu[None, None, :]
+    r = mix(p["mu_r"]) @ p["wr"]
+    k = mix(p["mu_k"]) @ p["wk"]
+    v = mix(p["mu_v"]) @ p["wv"]
+    g = mix(p["mu_g"]) @ p["wg"]
+    wx = mix(p["mu_w"])
+    w = jnp.exp(-jnp.exp(p["w0"][None, None, :] +
+                         (jnp.tanh(wx @ p["w_a"]) @ p["w_b"]).astype(F32)))
+    return r, k, v, g, w, x[:, -1]
+
+
+def rwkv6_forward(p, cfg: ArchConfig, x, state=None):
+    """x (B, S, D) -> (B, S, D); state = (x_prev (B,D), wkv (B,H,hd,hd))."""
+    b, s, d = x.shape
+    heads, hd = d // _RWKV_HD, _RWKV_HD
+    x_prev = state[0] if state is not None else jnp.zeros((b, d), x.dtype)
+    wkv0 = state[1] if state is not None else jnp.zeros((b, heads, hd, hd), F32)
+    r, k, v, g, w, x_last = _rwkv_streams(p, x, x_prev)
+    rh = r.reshape(b, s, heads, hd).astype(F32)
+    kh = k.reshape(b, s, heads, hd).astype(F32)
+    vh = v.reshape(b, s, heads, hd).astype(F32)
+    wh = w.reshape(b, s, heads, hd)
+
+    def step(wkv, inp):
+        r_t, k_t, v_t, w_t = inp                 # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       wkv + p["u"][None, :, :, None] * kv)
+        wkv = w_t[..., :, None] * wkv + kv
+        return wkv, y
+
+    seq = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+           vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    wkv_final, ys = jax.lax.scan(step, wkv0, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    # group norm per head then output gate
+    y = y.reshape(b, s, heads, hd)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = ((y - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d) * p["ln_scale"]
+    y = (y * jax.nn.silu(g.astype(F32))).astype(x.dtype)
+    return y @ p["wo"], (x_last, wkv_final)
+
+
+def init_rwkv_ffn(cfg: ArchConfig, kg: KeyGen, dtype):
+    # param names distinct from time-mix (fk/fv/fr) so sharding rules can
+    # pattern-match orientation by name
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.zeros((d,), dtype), "mu_r": jnp.zeros((d,), dtype),
+        "fk": dense_init(kg(), (d, f), dtype),
+        "fv": dense_init(kg(), (f, d), dtype),
+        "fr": dense_init(kg(), (d, d), dtype),
+    }
+
+
+def rwkv_ffn_forward(p, cfg: ArchConfig, x, x_prev=None):
+    """RWKV channel-mix: squared-relu FFN with token shift."""
+    b, s, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * p["mu_k"][None, None, :]
+    xr = x + (shifted - x) * p["mu_r"][None, None, :]
+    k = jnp.square(jax.nn.relu(xk @ p["fk"]))
+    return jax.nn.sigmoid(xr @ p["fr"]) * (k @ p["fv"]), x[:, -1]
+
+
+def init_rwkv6_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    heads = d // _RWKV_HD
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, heads, _RWKV_HD, _RWKV_HD), F32))
+
+
+def rwkv6_decode(p, cfg: ArchConfig, x, state):
+    return rwkv6_forward(p, cfg, x, state)

@@ -1,0 +1,341 @@
+"""Block assembly, stacked-layer scan, and the Model API for all 10 archs.
+
+Layers are stacked (leading L axis) and run under ``jax.lax.scan`` so HLO size
+stays flat at 512 devices; hybrid architectures run a python loop over
+homogeneous segments (zamba2: mamba2 runs with a shared attention block applied
+between segments).  Remat policy wraps the scan body.
+
+Model API (all architectures):
+  init(key, dtype)                      -> params
+  forward(params, tokens, extra)       -> logits (train path)
+  loss(params, batch)                  -> (scalar, aux)
+  init_cache(batch, max_len, dtype)    -> cache
+  prefill(params, tokens, extra)      -> (logits, cache)
+  decode(params, token, cache, pos)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import ssm as S
+from .common import (ArchConfig, KeyGen, dense_init, glu_act, rms_norm,
+                     softmax_cross_entropy)
+from .moe import init_moe, moe_forward
+
+F32 = jnp.float32
+
+
+def _segments(cfg: ArchConfig) -> list[tuple[str, int]]:
+    if cfg.family in ("dense", "audio", "vlm"):
+        return [("dense", cfg.n_layers)]
+    if cfg.family == "moe":
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(("dense", cfg.first_dense_layers))
+        segs.append(("moe", cfg.n_layers - cfg.first_dense_layers))
+        return segs
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        segs, left = [], cfg.n_layers
+        while left > 0:
+            segs.append(("mamba2", min(k, left)))
+            left -= k
+        return segs
+    if cfg.family == "ssm":
+        return [("rwkv6", cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_glu(cfg, kg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_gate": dense_init(kg(), (d, f), dtype),
+            "w_up": dense_init(kg(), (d, f), dtype),
+            "w_down": dense_init(kg(), (f, d), dtype)}
+
+
+def _glu(p, cfg, x):
+    return glu_act(x @ p["w_gate"], x @ p["w_up"], cfg.act) @ p["w_down"]
+
+
+def _init_block(kind: str, cfg: ArchConfig, kg: KeyGen, dtype, padded_e: int):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((d,), dtype)
+    if kind == "dense":
+        attn = A.init_mla(cfg, kg, dtype) if cfg.use_mla else \
+            A.init_gqa(cfg, kg, dtype)
+        return {"ln1": z(), "attn": attn, "ln2": z(),
+                "mlp": _init_glu(cfg, kg, dtype)}
+    if kind == "moe":
+        attn = A.init_mla(cfg, kg, dtype) if cfg.use_mla else \
+            A.init_gqa(cfg, kg, dtype)
+        return {"ln1": z(), "attn": attn, "ln2": z(),
+                "moe": init_moe(cfg, kg, dtype, padded_e)}
+    if kind == "mamba2":
+        return {"ln": z(), "mixer": S.init_mamba2(cfg, kg, dtype)}
+    if kind == "rwkv6":
+        return {"ln1": z(), "tm": S.init_rwkv6(cfg, kg, dtype),
+                "ln2": z(), "ffn": S.init_rwkv_ffn(cfg, kg, dtype)}
+    raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    expert_pad: int = 16          # pad experts to a multiple (EP divisibility)
+    vocab_pad: int = 1            # pad vocab to a multiple (Megatron-style)
+    use_flash_kernel: bool = False
+    remat: str = "none"           # none | full
+    capacity_factor: float = 1.25
+    constrain: Callable = staticmethod(lambda x, kind: x)  # sharding hook
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def padded_experts(self) -> int:
+        e = self.cfg.n_experts
+        m = self.expert_pad
+        return (e + m - 1) // m * m if e else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        v, m = self.cfg.vocab, self.vocab_pad
+        return (v + m - 1) // m * m
+
+    def _mask_vocab_pad(self, logits):
+        if self.padded_vocab == self.cfg.vocab:
+            return logits
+        iota = jnp.arange(self.padded_vocab, dtype=jnp.int32)
+        return jnp.where(iota < self.cfg.vocab, logits,
+                         jnp.asarray(-1e30, logits.dtype))
+
+    def _block_fwd(self, kind, p, x, positions, n_prefix):
+        """Returns (x, (lb_loss_delta, drop_frac_delta)) — aux is threaded
+        through the scan carry, never mutated across the scan boundary."""
+        cfg = self.cfg
+        zero = (jnp.zeros((), F32), jnp.zeros((), F32))
+        if kind in ("dense", "moe"):
+            attn = A.mla_forward if cfg.use_mla else A.gqa_forward
+            h = attn(p["attn"], cfg, rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norms_f32),
+                     positions, n_prefix, self.use_flash_kernel)
+            x = x + self.constrain(h, "residual")
+            y = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norms_f32)
+            if kind == "dense":
+                return x + self.constrain(_glu(p["mlp"], cfg, y),
+                                          "residual"), zero
+            out, a = moe_forward(p["moe"], cfg, y, self.padded_experts,
+                                 self.capacity_factor)
+            return x + self.constrain(out, "residual"), \
+                (a["lb_loss"], a["drop_frac"].astype(F32))
+        if kind == "mamba2":
+            y, _ = S.mamba2_forward(p["mixer"], cfg,
+                                    rms_norm(x, p["ln"], cfg.norm_eps, cfg.norms_f32))
+            return x + self.constrain(y, "residual"), zero
+        if kind == "rwkv6":
+            y, _ = S.rwkv6_forward(p["tm"], cfg,
+                                   rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norms_f32))
+            x = x + y
+            y, _ = S.rwkv_ffn_forward(p["ffn"], cfg,
+                                      rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norms_f32))
+            return x + y, zero
+        raise ValueError(kind)
+
+    def _block_step(self, kind, p, x, cache, pos, positions, n_prefix, decode):
+        """Single-layer prefill/decode with cache; returns (x, new_cache)."""
+        cfg = self.cfg
+        if kind in ("dense", "moe"):
+            y = rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norms_f32)
+            if cfg.use_mla:
+                h, cache_a = (A.mla_decode(p["attn"], cfg, y, cache, pos)
+                              if decode else
+                              A.mla_prefill(p["attn"], cfg, y, positions,
+                                            cache, n_prefix))
+            else:
+                h, cache_a = (A.gqa_decode(p["attn"], cfg, y, cache, pos)
+                              if decode else
+                              A.gqa_prefill(p["attn"], cfg, y, positions,
+                                            cache, n_prefix))
+            x = x + h
+            y = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norms_f32)
+            if kind == "dense":
+                x = x + _glu(p["mlp"], cfg, y)
+            else:
+                out, _ = moe_forward(p["moe"], cfg, y, self.padded_experts,
+                                     self.capacity_factor)
+                x = x + out
+            return x, cache_a
+        if kind == "mamba2":
+            y, st = S.mamba2_forward(p["mixer"], cfg,
+                                     rms_norm(x, p["ln"], cfg.norm_eps, cfg.norms_f32),
+                                     conv_state=cache[0], ssm_state=cache[1])
+            return x + y, st
+        if kind == "rwkv6":
+            y, tm = S.rwkv6_forward(p["tm"], cfg,
+                                    rms_norm(x, p["ln1"], cfg.norm_eps, cfg.norms_f32),
+                                    state=cache[0])
+            x = x + y
+            y, xp = S.rwkv_ffn_forward(p["ffn"], cfg,
+                                       rms_norm(x, p["ln2"], cfg.norm_eps, cfg.norms_f32),
+                                       x_prev=cache[1])
+            return x + y, (tm, xp)
+        raise ValueError(kind)
+
+    def _init_cache_layer(self, kind, batch, max_len, dtype):
+        cfg = self.cfg
+        if kind in ("dense", "moe"):
+            return (A.init_mla_cache(cfg, batch, max_len, dtype) if cfg.use_mla
+                    else A.init_kv_cache(cfg, batch, max_len, dtype))
+        if kind == "mamba2":
+            return S.init_mamba2_state(cfg, batch, dtype)
+        if kind == "rwkv6":
+            st = S.init_rwkv6_state(cfg, batch, dtype)
+            return (st, jnp.zeros((batch, cfg.d_model), dtype))
+        raise ValueError(kind)
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kg = KeyGen(key)
+        params: dict[str, Any] = {
+            "embed": dense_init(kg(), (self.padded_vocab, cfg.d_model), dtype,
+                                scale=0.02),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(kg(),
+                                           (cfg.d_model, self.padded_vocab),
+                                           dtype)
+        segs = []
+        for kind, count in _segments(cfg):   # kind is derived from cfg, not
+            layers = [_init_block(kind, cfg, kg, dtype, self.padded_experts)
+                      for _ in range(count)]         # stored in the pytree
+            segs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+        params["segments"] = segs
+        if cfg.shared_attn_every:
+            params["shared"] = _init_block("dense", cfg, kg, dtype, 0)
+        return params
+
+    # -- train forward -------------------------------------------------------
+    def forward(self, params, tokens, extra=None):
+        logits, _ = self._forward_aux(params, tokens, extra)
+        return logits
+
+    def _embed(self, params, tokens, extra):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        n_prefix = 0
+        if cfg.frontend == "vision_patches":
+            patches = extra["patches"].astype(x.dtype)   # stub frontend
+            x = jnp.concatenate([patches, x], axis=1)
+            n_prefix = patches.shape[1]
+        return self.constrain(x, "activation"), n_prefix
+
+    def _forward_aux(self, params, tokens, extra=None):
+        cfg = self.cfg
+        x, n_prefix = self._embed(params, tokens, extra)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        lb = jnp.zeros((), F32)
+        drop = jnp.zeros((), F32)
+        seg_kinds = _segments(cfg)
+
+        for i, (kind, _) in enumerate(seg_kinds):
+
+            def body(carry, layer_p, kind=kind):
+                xc, lb_c, dr_c = carry
+                out, (dlb, ddr) = self._block_fwd(kind, layer_p, xc,
+                                                  positions, n_prefix)
+                return (out, lb_c + dlb, dr_c + ddr), None
+
+            if self.remat == "full":
+                body = jax.checkpoint(body)
+            (x, lb, drop), _ = jax.lax.scan(body, (x, lb, drop),
+                                            params["segments"][i])
+            if cfg.shared_attn_every and i < len(seg_kinds) - 1:
+                x, _ = self._block_fwd("dense", params["shared"], x,
+                                       positions, n_prefix)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norms_f32)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = self.constrain(self._mask_vocab_pad(x @ head), "logits")
+        return logits, {"lb_loss": lb, "drop_frac": drop}
+
+    def loss(self, params, tokens, labels, extra=None):
+        logits, aux = self._forward_aux(params, tokens, extra)
+        n_prefix = logits.shape[1] - labels.shape[1]
+        if n_prefix:
+            logits = logits[:, n_prefix:]
+        ce = softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+        total = ce + 0.01 * aux.get("lb_loss", 0.0)
+        aux["ce"] = ce
+        return total, aux
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        cache = {"segments": [], "shared": []}
+        segs = _segments(self.cfg)
+        for kind, count in segs:
+            layers = [self._init_cache_layer(kind, batch, max_len, dtype)
+                      for _ in range(count)]
+            cache["segments"].append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                                  *layers))
+        if self.cfg.shared_attn_every:
+            for _ in range(max(0, len(segs) - 1)):
+                cache["shared"].append(
+                    self._init_cache_layer("dense", batch, max_len, dtype))
+        return cache
+
+    def _with_cache(self, params, x, cache, pos, positions, n_prefix, decode):
+        cfg = self.cfg
+        new_cache = {"segments": [], "shared": []}
+        seg_kinds = _segments(cfg)
+        for i, (kind, _) in enumerate(seg_kinds):
+
+            def body(xc, inp, kind=kind):
+                layer_p, layer_c = inp
+                out, c = self._block_step(kind, layer_p, xc, layer_c, pos,
+                                          positions, n_prefix, decode)
+                return out, c
+
+            x, seg_cache = jax.lax.scan(
+                body, x, (params["segments"][i], cache["segments"][i]))
+            new_cache["segments"].append(seg_cache)
+            if cfg.shared_attn_every and i < len(seg_kinds) - 1:
+                x, c = self._block_step("dense", params["shared"], x,
+                                        cache["shared"][i], pos, positions,
+                                        n_prefix, decode)
+                new_cache["shared"].append(c)
+        return x, new_cache
+
+    def prefill(self, params, tokens, cache, extra=None):
+        cfg = self.cfg
+        x, n_prefix = self._embed(params, tokens, extra)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, cache = self._with_cache(params, x, cache, 0, positions, n_prefix,
+                                    decode=False)
+        x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps, cfg.norms_f32)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return self._mask_vocab_pad(x @ head), cache
+
+    def decode(self, params, token, cache, pos):
+        """token (B, 1) int32; pos scalar int32 — one new token."""
+        cfg = self.cfg
+        x = params["embed"][token]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        positions = None
+        x, cache = self._with_cache(params, x, cache, pos, positions, 0,
+                                    decode=True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norms_f32)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return self._mask_vocab_pad(x @ head), cache

@@ -1,0 +1,203 @@
+"""TPC-H Q1-Q8 tensor plans."""
+from repro.core.table import days
+
+__all__ = ["q1", "q2", "q3", "q4", "q5", "q6", "q7", "q8"]
+
+
+def _disc(t):
+    return t["l_extendedprice"] * (1 - t["l_discount"])
+
+
+def _charge(t):
+    return t["l_extendedprice"] * (1 - t["l_discount"]) * (1 + t["l_tax"])
+
+
+def _in(x, vals):
+    m = x == vals[0]
+    for v in vals[1:]:
+        m = m | (x == v)
+    return m
+
+
+def q1(ctx):
+    """Pricing summary report.  No exchange: local agg + final gather-merge."""
+    l = ctx.scan("lineitem")
+    l = ctx.filter(l, l["l_shipdate"] <= days("1998-09-02"))
+    g = ctx.group_by(l, ["l_returnflag", "l_linestatus"], [
+        ("sum_qty", "sum", "l_quantity"),
+        ("sum_base_price", "sum", "l_extendedprice"),
+        ("sum_disc_price", "sum", _disc),
+        ("sum_charge", "sum", _charge),
+        ("avg_qty", "avg", "l_quantity"),
+        ("avg_price", "avg", "l_extendedprice"),
+        ("avg_disc", "avg", "l_discount"),
+        ("count_order", "count", None),
+    ], exchange="gather", final=True, groups_hint=8)
+    return ctx.finalize(g, sort_keys=[("l_returnflag", True), ("l_linestatus", True)],
+                        replicated=True)
+
+
+def _europe_suppliers(ctx):
+    nat = ctx.scan("nation")
+    reg = ctx.scan("region")
+    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
+    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "EUROPE"))
+    s = ctx.join(ctx.scan("supplier"), n, "s_nationkey", "n_nationkey", ["n_name"])
+    return s
+
+
+def q2(ctx):
+    """Minimum-cost supplier.  Broadcast the (small) filtered EU suppliers."""
+    part = ctx.scan("part")
+    ps = ctx.scan("partsupp")
+    p = ctx.filter(part, (part["p_size"] == 15) & ctx.ends_with(part, "p_type", "BRASS"))
+    s = _europe_suppliers(ctx)
+    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_acctbal", "n_name"))
+    j = ctx.join(ps, p, "ps_partkey", "p_partkey", ["p_mfgr"])          # co-partitioned
+    j = ctx.join(j, sb, "ps_suppkey", "s_suppkey", ["s_acctbal", "n_name"])
+    mn = ctx.group_by(j, ["ps_partkey"], [("min_cost", "min", "ps_supplycost")],
+                      exchange="local")                                  # partkey-local
+    j = ctx.join(j, ctx.rename(mn, {"ps_partkey": "mk"}),
+                 "ps_partkey", "mk", ["min_cost"])
+    j = ctx.filter(j, j["ps_supplycost"] == j["min_cost"])
+    j = ctx.with_col(j, n_rank=lambda t: ctx.alpha_rank(t, "n_name"))
+    out = ctx.select(j, "s_acctbal", "n_name", "n_rank", "ps_suppkey",
+                     "ps_partkey", "p_mfgr")
+    return ctx.finalize(out, sort_keys=[("s_acctbal", False), ("n_rank", True),
+                                        ("ps_suppkey", True), ("ps_partkey", True)],
+                        limit=100)
+
+
+def q3(ctx):
+    """Shipping priority.  Broadcast BUILDING-segment customer keys."""
+    c = ctx.scan("customer")
+    o = ctx.scan("orders")
+    l = ctx.scan("lineitem")
+    c = ctx.filter(c, ctx.eq(c, "c_mktsegment", "BUILDING"))
+    cb = ctx.broadcast(ctx.select(c, "c_custkey"))
+    o = ctx.filter(o, o["o_orderdate"] < days("1995-03-15"))
+    o = ctx.semi(o, cb, "o_custkey", "c_custkey")
+    l = ctx.filter(l, l["l_shipdate"] > days("1995-03-15"))
+    j = ctx.join(l, o, "l_orderkey", "o_orderkey", ["o_orderdate", "o_shippriority"])
+    g = ctx.group_by(j, ["l_orderkey"], [
+        ("revenue", "sum", _disc),
+        ("o_orderdate", "max", "o_orderdate"),
+        ("o_shippriority", "max", "o_shippriority"),
+    ], exchange="local")                                                 # orderkey-local
+    return ctx.finalize(g, sort_keys=[("revenue", False), ("o_orderdate", True)],
+                        limit=10)
+
+
+def q4(ctx):
+    """Order priority checking.  Fully co-partitioned: no exchange."""
+    o = ctx.scan("orders")
+    l = ctx.scan("lineitem")
+    o = ctx.filter(o, (o["o_orderdate"] >= days("1993-07-01")) &
+                   (o["o_orderdate"] < days("1993-10-01")))
+    lc = ctx.filter(l, l["l_commitdate"] < l["l_receiptdate"])
+    o = ctx.semi(o, lc, "o_orderkey", "l_orderkey")
+    g = ctx.group_by(o, ["o_orderpriority"], [("order_count", "count", None)],
+                     exchange="gather", final=True, groups_hint=8)
+    return ctx.finalize(g, sort_keys=[("o_orderpriority", True)], replicated=True)
+
+
+def q5(ctx):
+    """Local supplier volume.  Two dimension broadcasts (customer, supplier)."""
+    nat = ctx.scan("nation")
+    reg = ctx.scan("region")
+    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
+    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "ASIA"))
+    c = ctx.semi(ctx.scan("customer"), n, "c_nationkey", "n_nationkey")
+    cb = ctx.broadcast(ctx.select(c, "c_custkey", "c_nationkey"))
+    o = ctx.scan("orders")
+    o = ctx.filter(o, (o["o_orderdate"] >= days("1994-01-01")) &
+                   (o["o_orderdate"] < days("1995-01-01")))
+    oj = ctx.join(o, cb, "o_custkey", "c_custkey", ["c_nationkey"])
+    lj = ctx.join(ctx.scan("lineitem"), oj, "l_orderkey", "o_orderkey",
+                  ["c_nationkey"])
+    s = ctx.semi(ctx.scan("supplier"), n, "s_nationkey", "n_nationkey")
+    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))
+    lj = ctx.join(lj, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    lj = ctx.filter(lj, lj["c_nationkey"] == lj["s_nationkey"])
+    g = ctx.group_by(lj, ["s_nationkey"], [("revenue", "sum", _disc)],
+                     exchange="gather", final=True, groups_hint=32)
+    # n_name dictionary code == nationkey by construction
+    return ctx.finalize(g, sort_keys=[("revenue", False)], replicated=True)
+
+
+def q6(ctx):
+    """Forecasting revenue change: pure scan + allreduce."""
+    l = ctx.scan("lineitem")
+    m = ((l["l_shipdate"] >= days("1994-01-01")) &
+         (l["l_shipdate"] < days("1995-01-01")) &
+         (l["l_discount"] >= 0.05) & (l["l_discount"] <= 0.07) &
+         (l["l_quantity"] < 24))
+    l = ctx.filter(l, m)
+    s = ctx.agg_scalar(l, [("revenue", "sum",
+                            lambda t: t["l_extendedprice"] * t["l_discount"])])
+    return {"revenue": s["revenue"]}
+
+
+def q7(ctx):
+    """Volume shipping FRANCE<->GERMANY.  Broadcast both filtered dimensions."""
+    fr = ctx.db.code("n_name", "FRANCE")
+    de = ctx.db.code("n_name", "GERMANY")
+    s = ctx.scan("supplier")
+    s = ctx.filter(s, _in(s["s_nationkey"], [fr, de]))
+    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))
+    c = ctx.scan("customer")
+    c = ctx.filter(c, _in(c["c_nationkey"], [fr, de]))
+    cb = ctx.broadcast(ctx.select(c, "c_custkey", "c_nationkey"))
+    o = ctx.scan("orders")
+    oj = ctx.join(o, cb, "o_custkey", "c_custkey", ["c_nationkey"])
+    l = ctx.scan("lineitem")
+    l = ctx.filter(l, (l["l_shipdate"] >= days("1995-01-01")) &
+                   (l["l_shipdate"] <= days("1996-12-31")))
+    lj = ctx.join(l, oj, "l_orderkey", "o_orderkey", ["c_nationkey"])
+    lj = ctx.join(lj, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    lj = ctx.filter(lj, ((lj["s_nationkey"] == fr) & (lj["c_nationkey"] == de)) |
+                    ((lj["s_nationkey"] == de) & (lj["c_nationkey"] == fr)))
+    lj = ctx.with_col(lj, l_year=lambda t: ctx.year(t, "l_shipdate"))
+    lj = ctx.with_col(lj, grp=lambda t: (t["s_nationkey"] * 25 + t["c_nationkey"])
+                      * 8 + (t["l_year"] - 1992))
+    g = ctx.group_by(lj, ["grp"], [
+        ("supp_nation", "max", "s_nationkey"),
+        ("cust_nation", "max", "c_nationkey"),
+        ("l_year", "max", "l_year"),
+        ("revenue", "sum", _disc),
+    ], exchange="gather", final=True, groups_hint=16)
+    return ctx.finalize(ctx.select(g, "supp_nation", "cust_nation", "l_year", "revenue"),
+                        sort_keys=[("supp_nation", True), ("cust_nation", True),
+                                   ("l_year", True)], replicated=True)
+
+
+def q8(ctx):
+    """National market share.  Three broadcasts: part, supplier, customer."""
+    br = ctx.db.code("n_name", "BRAZIL")
+    nat = ctx.scan("nation")
+    reg = ctx.scan("region")
+    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
+    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "AMERICA"))
+    p = ctx.scan("part")
+    p = ctx.filter(p, ctx.eq(p, "p_type", "ECONOMY ANODIZED STEEL"))
+    pb = ctx.broadcast(ctx.select(p, "p_partkey"))                       # b1
+    l = ctx.semi(ctx.scan("lineitem"), pb, "l_partkey", "p_partkey")
+    s = ctx.scan("supplier")
+    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))        # b2
+    l = ctx.join(l, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    c = ctx.semi(ctx.scan("customer"), n, "c_nationkey", "n_nationkey")
+    cb = ctx.broadcast(ctx.select(c, "c_custkey"))                       # b3
+    o = ctx.scan("orders")
+    o = ctx.filter(o, (o["o_orderdate"] >= days("1995-01-01")) &
+                   (o["o_orderdate"] <= days("1996-12-31")))
+    o = ctx.semi(o, cb, "o_custkey", "c_custkey")
+    lj = ctx.join(l, o, "l_orderkey", "o_orderkey", ["o_orderdate"])
+    lj = ctx.with_col(lj, o_year=lambda t: ctx.year(t, "o_orderdate"))
+    g = ctx.group_by(lj, ["o_year"], [
+        ("total", "sum", _disc),
+        ("brazil", "sum", lambda t: ctx.xp.where(t["s_nationkey"] == br,
+                                                 _disc(t), 0.0)),
+    ], exchange="gather", final=True, groups_hint=16)
+    g = ctx.with_col(g, mkt_share=lambda t: t["brazil"] / t["total"])
+    return ctx.finalize(ctx.select(g, "o_year", "mkt_share"),
+                        sort_keys=[("o_year", True)], replicated=True)

@@ -1,0 +1,4 @@
+"""Serving substrate: cache layouts live in models/; step factories in
+train.trainstep (make_prefill_step / make_decode_step); sequence-sharded
+flash-decode specs in distributed.shardings.cache_specs."""
+from repro.train.trainstep import make_decode_step, make_prefill_step  # noqa

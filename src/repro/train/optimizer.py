@@ -1,0 +1,108 @@
+"""AdamW with ZeRO-style sharded state and optional gradient compression.
+
+Optimizer state mirrors the parameter PartitionSpecs (FSDP+TP 2-D sharding),
+so m/v never materialize unsharded — GSPMD keeps updates local.  Gradient
+compression (bf16 / int8 with error feedback) reduces the all-reduce bytes of
+the data-parallel gradient reduction; the residual buffer makes it unbiased
+over steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(params):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+    }
+
+
+def apply_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step.astype(F32))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** step.astype(F32))
+        vh = v / (1 - cfg.b2 ** step.astype(F32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                      # decoupled weight decay (matrices)
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (distributed-optimization trick)
+# ---------------------------------------------------------------------------
+
+def compress_bf16(grads):
+    """Cast the DP all-reduce payload to bf16 (2x collective bytes saved)."""
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compress_int8_ef(grads, residual):
+    """Per-tensor int8 quantization with error feedback.
+
+    Returns (quantized-as-f32 grads, new residual).  The all-reduce payload in
+    a real deployment is the int8 tensor + scale; here we model it by rounding
+    through int8 so numerics match what the wire would carry."""
+    def q(g, r):
+        g = g.astype(F32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-9) / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127)
+        deq = qg * scale
+        return deq, g - deq
+
+    pairs = jax.tree.map(q, grads, residual)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_r

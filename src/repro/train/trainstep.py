@@ -1,0 +1,90 @@
+"""train_step / serve_step factories with sharding + remat + compression."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from . import optimizer as opt
+
+F32 = jnp.float32
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig,
+                    grad_compress: str = "none", microbatches: int = 1):
+    """Returns step(params, state, batch) -> (params, state, metrics).
+
+    batch: {"tokens", "labels"} (+ "patches" for VLM).  grad_compress in
+    {none, bf16, int8_ef}; int8_ef expects state["ef"] (error feedback).
+
+    ``microbatches`` > 1 accumulates gradients over a scan of batch slices —
+    peak activation memory drops ~M-fold at identical math (the fix for
+    cells whose per-device working set exceeds HBM; EXPERIMENTS §Perf)."""
+
+    def grads_of(params, batch):
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "labels")} or None
+
+        def loss_fn(p):
+            return model.loss(p, batch["tokens"], batch["labels"],
+                              extra=extra)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(params, state, batch):
+        if microbatches == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            m = microbatches
+            sliced = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+
+            def body(acc, micro):
+                (l, a), g = grads_of(params, micro)
+                acc_g, acc_l, acc_aux = acc
+                acc_g = jax.tree.map(lambda s, gi: s + gi.astype(F32) / m,
+                                     acc_g, g)
+                acc_aux = jax.tree.map(lambda s, ai: s + ai / m, acc_aux, a)
+                return (acc_g, acc_l + l / m, acc_aux), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            zero_aux = {"lb_loss": jnp.zeros((), F32), "ce": jnp.zeros((), F32),
+                        "drop_frac": jnp.zeros((), F32)}
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), F32), zero_aux), sliced)
+        new_state = dict(state)
+        if grad_compress == "bf16":
+            grads = opt.compress_bf16(grads)
+        elif grad_compress == "int8_ef":
+            grads, new_state["ef"] = opt.compress_int8_ef(grads, state["ef"])
+        params, new_state["opt"], om = opt.apply_update(ocfg, params, grads,
+                                                        state["opt"])
+        metrics = {"loss": loss.astype(F32), **aux, **om}
+        return params, new_state, metrics
+
+    return step
+
+
+def init_train_state(model: Model, params, grad_compress: str = "none"):
+    state = {"opt": opt.init_state(params)}
+    if grad_compress == "int8_ef":
+        state["ef"] = opt.init_error_feedback(params)
+    return state
+
+
+def make_prefill_step(model: Model, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16):
+    def prefill(params, inputs):
+        extra = {k: v for k, v in inputs.items() if k != "tokens"} or None
+        cache = model.init_cache(batch, max_len, dtype=cache_dtype)
+        return model.prefill(params, inputs["tokens"], cache, extra=extra)
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, token, cache, pos):
+        return model.decode(params, token, cache, pos)
+    return decode

@@ -1,0 +1,130 @@
+"""HLO collective parser + data generator invariants + train substrate."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import jcch, tpch
+from repro.distributed import hlo_analysis as ha
+from repro.train import optimizer as optim
+
+_HLO = """
+ENTRY %main {
+  %p0 = bf16[64,128]{1,0} parameter(0)
+  %ag = bf16[512,128]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[256]{0} all-reduce(%x), to_apply=%add
+  %rs.1 = f32[32,16]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = (s32[8,4]{1,0}, s32[8,4]{1,0}) all-to-all(%a, %b)
+  %cp = bf16[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = bf16[512,128]{1,0} all-gather-start(%p0)
+  %agd = bf16[512,128]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_parse_collectives_bytes_and_counts():
+    st = ha.parse_collectives(_HLO)
+    assert st.count_by_kind["all-gather"] == 2      # plain + -start
+    assert st.count_by_kind["all-reduce"] == 1
+    assert st.bytes_by_kind["all-gather"] == 2 * 512 * 128 * 2
+    assert st.bytes_by_kind["all-reduce"] == 256 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 32 * 16 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * 8 * 4 * 4
+    assert st.bytes_by_kind["collective-permute"] == 16 * 2
+
+
+def test_roofline_terms_pick_bottleneck():
+    r = ha.roofline_terms(hlo_flops=197e12, hlo_bytes=1e9,
+                          collective_bytes=1e9, n_chips=1,
+                          model_flops=98.5e12)
+    assert r["bottleneck"] == "compute"
+    assert r["useful_flop_frac"] == pytest.approx(0.5)
+    assert 0 < r["roofline_frac"] <= 1.0
+    r2 = ha.roofline_terms(1e12, 819e9 * 2, 0.0, 1)
+    assert r2["bottleneck"] == "memory"
+
+
+def test_tpch_referential_integrity():
+    db = tpch.generate(0.004, seed=3)
+    li = db.tables["lineitem"]
+    ps = db.tables["partsupp"]
+    pairs_ps = set(zip(ps["ps_partkey"].tolist(), ps["ps_suppkey"].tolist()))
+    pairs_li = set(zip(li["l_partkey"][:2000].tolist(),
+                       li["l_suppkey"][:2000].tolist()))
+    assert pairs_li <= pairs_ps
+    ok = db.tables["orders"]["o_orderkey"]
+    assert li["l_orderkey"].min() >= ok.min()
+    assert li["l_orderkey"].max() <= ok.max()
+    # a third of customers have no orders (Q13/Q22 depend on this)
+    n_c = len(db.tables["customer"]["c_custkey"])
+    missing = n_c - len(np.unique(db.tables["orders"]["o_custkey"]))
+    assert missing > 0.2 * n_c
+    # phone country code rule (Q22)
+    c = db.tables["customer"]
+    np.testing.assert_array_equal(c["c_phone_cc"], c["c_nationkey"] + 10)
+
+
+def test_jcch_skew_concentrates_keys():
+    uni = tpch.generate(0.004, seed=3)
+    skw = jcch.generate(0.004, seed=3, skew=0.3)
+    def top_share(db):
+        _, counts = np.unique(db.tables["lineitem"]["l_partkey"],
+                              return_counts=True)
+        counts.sort()
+        return counts[-5:].sum() / counts.sum()
+    assert top_share(skw) > 3 * top_share(uni)
+
+
+def test_adamw_descends_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = optim.init_state(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        return optim.apply_update(cfg, p, g, s)
+
+    for _ in range(50):
+        params, state, m = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+    assert float(m["grad_norm"]) < 2.0
+
+
+def test_int8_error_feedback_unbiased():
+    grads = {"w": jnp.asarray(np.random.default_rng(0).normal(size=256),
+                              jnp.float32)}
+    resid = optim.init_error_feedback(grads)
+    acc = jnp.zeros(256)
+    for _ in range(20):
+        q, resid = optim.compress_int8_ef(grads, resid)
+        acc = acc + q["w"]
+    # over steps, quantized sum approaches true sum (error feedback)
+    np.testing.assert_allclose(np.asarray(acc) / 20, np.asarray(grads["w"]),
+                               atol=2e-2)
+
+
+def test_microbatched_step_matches_plain():
+    """Grad accumulation over microbatches is numerically identical."""
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.train.trainstep import init_train_state, make_train_step
+
+    cfg = get_config("phi3_mini_3_8b").reduced()
+    model = Model(cfg, expert_pad=1)
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    state = init_train_state(model, params)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)),
+                                   jnp.int32)}
+    batch["labels"] = batch["tokens"]
+    p1, _, m1 = jax.jit(make_train_step(model, optim.AdamWConfig()))(
+        params, state, batch)
+    p4, _, m4 = jax.jit(make_train_step(model, optim.AdamWConfig(),
+                                        microbatches=4))(params, state, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 5e-5

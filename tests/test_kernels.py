@@ -1,0 +1,102 @@
+"""Pallas kernels: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.hash_probe import ops as hp
+from repro.kernels.hash_probe.ref import hash_probe_ref
+from repro.kernels.radix_hist import ops as rh
+from repro.kernels.segsum import ops as ss
+from repro.kernels.segsum.ref import segment_sum_ref
+
+rng = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n,g,c", [(64, 5, 1), (300, 17, 2), (1000, 50, 3),
+                                   (2048, 130, 8), (4096, 200, 16)])
+def test_segsum_sweep(n, g, c):
+    gids = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+    got = ss.segment_sum(gids, vals, g)
+    want = segment_sum_ref(gids, vals, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=1e-4)
+
+
+def test_segsum_1d_values():
+    gids = jnp.asarray(rng.integers(0, 9, 100).astype(np.int32))
+    vals = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    got = ss.segment_sum(gids, vals, 9)
+    assert got.shape == (9,)
+    np.testing.assert_allclose(float(got.sum()), float(vals.sum()), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,p,blk", [(100, 8, 64), (1000, 64, 256),
+                                     (4096, 256, 512), (777, 13, 128)])
+def test_radix_hist_sweep(n, p, blk):
+    keys = jnp.asarray(rng.integers(0, 1 << 31, n).astype(np.int32))
+    got = np.asarray(rh.radix_hist(keys, p, blk=blk))
+    want = np.asarray(rh.radix_hist(keys, p, blk=blk, use_kernel=False))
+    np.testing.assert_allclose(got.sum(axis=0), want.sum(axis=0))
+    assert int(got.sum()) == n
+
+
+def test_skew_stats_detects_hot_partition():
+    keys = jnp.asarray(np.concatenate([
+        np.full(900, 12345, dtype=np.int32),
+        rng.integers(0, 1 << 30, 100).astype(np.int32)]))
+    stats = rh.skew_stats(keys, 16, blk=128)
+    assert float(stats["imbalance"]) > 4.0
+
+
+@pytest.mark.parametrize("m,n", [(10, 64), (100, 500), (1000, 3000)])
+def test_hash_probe_sweep(m, n):
+    bkeys = jnp.asarray(rng.choice(1 << 30, m, replace=False).astype(np.int32))
+    bvals = jnp.arange(m, dtype=jnp.int32)
+    pkeys = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+    got, cap = hp.hash_join_probe_auto(pkeys, bkeys, bvals)
+    want = hash_probe_ref(pkeys, bkeys, bvals)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,dt", [
+    (1, 2, 1, 64, 32, np.float32),
+    (2, 4, 4, 128, 64, np.float32),
+    (1, 8, 2, 128, 128, np.float32),
+    (2, 4, 2, 128, 64, np.float16),
+])
+def test_flash_attention_sweep(b, hq, hkv, s, d, dt):
+    q = jnp.asarray(rng.normal(size=(b, hq, s, d)).astype(dt))
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(dt))
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(dt))
+    got = fa.flash_attention(q, k, v, causal=True, q_blk=64, kv_blk=64)
+    want = fa.flash_attention(q, k, v, causal=True, use_kernel=False)
+    tol = 2e-3 if dt == np.float16 else 3e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal():
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32)).astype(np.float32))
+    got = fa.flash_attention(q, k, v, causal=False, q_blk=32, kv_blk=32)
+    want = fa.flash_attention(q, k, v, causal=False, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(10, 300), st.integers(2, 40))
+def test_segsum_property_conservation(n, g):
+    gids = jnp.asarray(np.random.default_rng(n * g).integers(0, g, n)
+                       .astype(np.int32))
+    vals = jnp.asarray(np.random.default_rng(n + g).normal(size=(n, 1))
+                       .astype(np.float32))
+    got = ss.segment_sum(gids, vals, g)
+    np.testing.assert_allclose(float(np.asarray(got).sum()),
+                               float(np.asarray(vals).sum()), atol=1e-3)

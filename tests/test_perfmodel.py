@@ -1,0 +1,85 @@
+"""Analytical model tests: the paper's §3 claims hold in our implementation."""
+import numpy as np
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+@pytest.fixture
+def h100():
+    return pm.CLUSTERS["h100_ib"]
+
+
+def test_broadcast_throughput_decreases_with_v(h100):
+    ths = [pm.broadcast_throughput(h100, v) for v in range(1, 9)]
+    assert all(a >= b - 1e-6 for a, b in zip(ths, ths[1:]))
+    # converges towards min(Bn/k, Bg) (paper Fig 5a); V=8 -> N=64
+    assert ths[-1] == pytest.approx(
+        64 / 63 * min(h100.bn / h100.k, h100.bg), rel=1e-6)
+
+
+def test_shuffle_throughput_increases_with_v(h100):
+    ss = [pm.shuffle_throughput(h100, v) for v in range(2, 9)]
+    assert all(a <= b for a, b in zip(ss, ss[1:]))
+
+
+def test_shuffle_vs_broadcast_v_times(h100):
+    """§3.3: shuffle ~V times more efficient than broadcast for IB-class Bn."""
+    for v in (2, 4, 8):
+        ratio = pm.shuffle_throughput(h100, v) / \
+            pm.broadcast_throughput(h100, v)
+        assert ratio > v / 2
+
+
+def test_eq3_broadcast_beats_shuffle(h100):
+    # V=1: |S|/|R| > N-1
+    assert pm.broadcast_beats_shuffle(h100, 1, 1.0, 8.0)
+    assert not pm.broadcast_beats_shuffle(h100, 1, 1.0, 6.9)
+    # more machines make shuffle favourable (fixed size ratio): the
+    # threshold grows ~V (paper: "more GPUs make shuffle more favorable")
+    wins = [pm.broadcast_beats_shuffle(h100, v, 1.0, 30.0)
+            for v in (1, 8, 64)]
+    assert wins[0] and wins[1] and not wins[2]
+
+
+def test_skew_model_per_node_not_per_gpu(h100):
+    """§3.5: intra-node skew does NOT slow the shuffle; inter-node does."""
+    n, k = 16, 8
+    base = np.full((n, n), 1.0)
+    t0 = pm.shuffle_time_skewed(*pm.node_send_recv(base, k), h100.bn)
+    # skew WITHIN node 0 only: devices of node 0 unbalanced, node totals equal
+    intra = base.copy()
+    intra[0, :] += 0.5
+    intra[7, :] -= 0.5
+    t1 = pm.shuffle_time_skewed(*pm.node_send_recv(intra, k), h100.bn)
+    assert t1 == pytest.approx(t0, rel=1e-9)
+    # inter-node skew: node 0 sends 2x
+    inter = base.copy()
+    inter[:8, :] *= 2
+    t2 = pm.shuffle_time_skewed(*pm.node_send_recv(inter, k), h100.bn)
+    assert t2 > t0 * 1.5
+
+
+def test_hockney_fit_recovers_parameters():
+    L, c = 12e-6, 1 / (25e9)
+    ms = np.logspace(2, 9, 25)
+    fit = pm.fit_hockney(ms, L + c * ms)
+    assert fit.latency == pytest.approx(L, rel=1e-6)
+    assert fit.inv_bw == pytest.approx(c, rel=1e-9)
+    assert fit.bandwidth(1e9) < 25e9  # latency always costs something
+
+
+def test_projection_shapes_match_paper(h100):
+    """§6.3: compute drops with V; broadcast term grows (Fig 13b)."""
+    proj = pm.project_workload(h100, range(1, 9), 1.0,
+                               [("broadcast", 5e9), ("shuffle", 5e9)])
+    assert proj[8]["compute"] < proj[1]["compute"]
+    assert proj[8]["broadcast"] > proj[2]["broadcast"]
+
+
+def test_small_messages_hurt(h100):
+    fit = pm.Hockney(latency=20e-6, inv_bw=1 / h100.bn)
+    t_small = pm.exchange_time("shuffle", h100, 4, 1e6, fit, fit)
+    t_large = pm.exchange_time("shuffle", h100, 4, 1e10, fit, fit)
+    # per-byte cost much worse for the small exchange
+    assert (t_small / 1e6) > 5 * (t_large / 1e10)

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import reference as REF
+from repro.core import relational as R
+from repro.core.backend import hash_partition_np
+from repro.core.exchange import pack_columns, unpack_columns
+from repro.core.table import Table, from_numpy, to_numpy
+
+_small = st.integers(min_value=1, max_value=60)
+
+
+@st.composite
+def tables(draw):
+    n = draw(_small)
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    return {
+        "k": rng.integers(0, draw(st.integers(1, 20)), n).astype(np.int64),
+        "v": rng.normal(size=n),
+        "b": rng.integers(0, 2, n).astype(bool),
+        "i": rng.integers(-1000, 1000, n).astype(np.int32),
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(tables())
+def test_group_sum_preserved_under_grouping(cols):
+    """sum over groups == total sum (conservation)."""
+    t = from_numpy(cols, capacity=max(8, len(cols["k"]) + 5))
+    g = R.group_aggregate(t, ["k"], [("s", "sum", "v")])
+    got = to_numpy(g)
+    np.testing.assert_allclose(got["s"].sum(), cols["v"].sum(), rtol=1e-9)
+    # group count == distinct keys
+    assert len(got["s"]) == len(np.unique(cols["k"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(tables(), st.integers(0, 19))
+def test_filter_compact_invariant(cols, thresh):
+    """After filter: count == mask sum, and all valid rows satisfy the mask."""
+    t = from_numpy(cols, capacity=max(8, len(cols["k"]) + 3))
+    f = R.filter_rows(t, t["k"] < thresh)
+    got = to_numpy(f)
+    assert (got["k"] < thresh).all()
+    assert len(got["k"]) == int((cols["k"] < thresh).sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(tables())
+def test_pack_unpack_roundtrip(cols):
+    """Column packing for the fused exchange is lossless for every dtype."""
+    t = from_numpy(cols, capacity=max(8, len(cols["k"])))
+    buf, spec = pack_columns(t)
+    assert buf.dtype == jnp.int32
+    back = unpack_columns(buf, spec)
+    for name in t.names:
+        np.testing.assert_array_equal(np.asarray(back[name]),
+                                      np.asarray(t[name]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2**40), min_size=1, max_size=50),
+       st.integers(1, 16))
+def test_hash_partition_host_device_agree(keys, n):
+    """Host partitioner (data loading) must agree with the in-jit hash
+    (shuffle destinations) or co-partitioned joins would silently break."""
+    k = np.asarray(keys, dtype=np.int64)
+    host = hash_partition_np(k, n)
+    dev = np.asarray(R.hash_partition_ids(jnp.asarray(k), n))
+    np.testing.assert_array_equal(host, dev)
+
+
+@settings(max_examples=20, deadline=None)
+@given(tables())
+def test_sort_matches_reference(cols):
+    t = from_numpy(cols, capacity=max(8, len(cols["k"]) + 2))
+    got = to_numpy(R.sort_by(t, [("k", True), ("i", False)]))
+    want = REF.sort_by(cols, [("k", True), ("i", False)])
+    np.testing.assert_array_equal(got["k"], want["k"])
+    np.testing.assert_array_equal(got["i"], want["i"])

@@ -1,0 +1,100 @@
+"""Unit tests: static-shape relational ops vs the NumPy reference."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import reference as REF
+from repro.core import relational as R
+from repro.core.table import from_numpy, to_numpy
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    n = 153
+    return {
+        "k": rng.integers(0, 12, n).astype(np.int64),
+        "k2": rng.integers(0, 5, n).astype(np.int64),
+        "v": rng.normal(size=n),
+        "q": rng.integers(1, 50, n).astype(np.int64),
+    }
+
+
+def test_filter_matches_reference(data):
+    t = from_numpy(data, capacity=256)
+    got = to_numpy(R.filter_rows(t, (t["k"] < 6) & (t["q"] > 10)))
+    want = REF.filter_rows(data, (data["k"] < 6) & (data["q"] > 10))
+    assert got["v"].shape == want["v"].shape
+    np.testing.assert_allclose(np.sort(got["v"]), np.sort(want["v"]))
+
+
+def test_group_aggregate_all_ops(data):
+    t = from_numpy(data, capacity=256)
+    aggs = [("s", "sum", "v"), ("c", "count", None),
+            ("mn", "min", "v"), ("mx", "max", "v")]
+    got = to_numpy(R.group_aggregate(t, ["k", "k2"], aggs))
+    want = REF.group_aggregate(data, ["k", "k2"], aggs)
+    o = np.lexsort((got["k2"], got["k"]))
+    ow = np.lexsort((want["k2"], want["k"]))
+    for c in ("s", "c", "mn", "mx"):
+        np.testing.assert_allclose(got[c][o], want[c][ow], rtol=1e-12)
+
+
+def test_join_semi_anti_left(data):
+    t = from_numpy(data, capacity=256)
+    bcols = {"bk": np.arange(8, dtype=np.int64), "bv": np.arange(8) * 2.0}
+    b = from_numpy(bcols, capacity=16)
+    got = to_numpy(R.join_unique(t, b, t["k"], b["bk"], ["bv"]))
+    want = REF.join_unique(data, bcols, data["k"], bcols["bk"], ["bv"])
+    assert got["bv"].shape == want["bv"].shape
+    np.testing.assert_allclose(np.sort(got["bv"] + got["v"]),
+                               np.sort(want["bv"] + want["v"]))
+    sg = to_numpy(R.semi_join(t, b, t["k"], b["bk"]))
+    sw = REF.semi_join(data, bcols, data["k"], bcols["bk"])
+    assert sg["k"].shape == sw["k"].shape
+    ag = to_numpy(R.anti_join(t, b, t["k"], b["bk"]))
+    aw = REF.anti_join(data, bcols, data["k"], bcols["bk"])
+    assert ag["k"].shape == aw["k"].shape
+    lg = to_numpy(R.left_join(t, b, t["k"], b["bk"], ["bv"], {"bv": -1.0}))
+    lw = REF.left_join(data, bcols, data["k"], bcols["bk"], ["bv"],
+                       {"bv": -1.0})
+    np.testing.assert_allclose(np.sort(lg["bv"]), np.sort(lw["bv"]))
+
+
+def test_join_rejects_duplicate_build_keys():
+    b = {"bk": np.array([1, 1, 2], dtype=np.int64), "bv": np.zeros(3)}
+    p = {"k": np.array([1, 2], dtype=np.int64)}
+    with pytest.raises(ValueError):
+        REF.join_unique(p, b, p["k"], b["bk"], ["bv"])
+
+
+def test_sort_by_multikey(data):
+    t = from_numpy(data, capacity=256)
+    got = to_numpy(R.sort_by(t, [("k", True), ("v", False)]))
+    want = REF.sort_by(data, [("k", True), ("v", False)])
+    np.testing.assert_allclose(got["v"], want["v"])
+    np.testing.assert_array_equal(got["k"], want["k"])
+
+
+def test_static_shrink_overflow_flag(data):
+    t = from_numpy(data, capacity=256)
+    small, ov = R.static_shrink(t, 64)
+    assert bool(ov) and small.capacity == 64
+    big, ov2 = R.static_shrink(t, 200)
+    assert not bool(ov2) and int(big.count) == len(data["k"])
+
+
+def test_combine_keys_rejects_three():
+    with pytest.raises(ValueError):
+        R.combine_keys([jnp.arange(3)] * 3)
+    with pytest.raises(ValueError):
+        REF.combine_keys([np.arange(3)] * 3)
+
+
+def test_limit_and_valid_mask(data):
+    t = from_numpy(data, capacity=256)
+    l5 = R.limit(R.sort_by(t, [("v", True)]), 5)
+    got = to_numpy(l5)
+    want = np.sort(data["v"])[:5]
+    np.testing.assert_allclose(got["v"], want)

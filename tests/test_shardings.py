@@ -1,0 +1,81 @@
+"""Sharding-rule unit tests (pure spec logic — no devices needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.shardings import MeshAxes, cache_specs, param_specs
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def qwen_structs():
+    cfg = get_config("qwen1_5_110b")
+    model = Model(cfg, expert_pad=16, vocab_pad=128)
+    p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0),
+                                          dtype=jnp.bfloat16))
+    c = jax.eval_shape(lambda: model.init_cache(128, 1024,
+                                                dtype=jnp.bfloat16))
+    return cfg, model, p, c
+
+
+def test_param_specs_2d_sharding(qwen_structs):
+    cfg, model, p, _ = qwen_structs
+    specs = param_specs(p, MeshAxes(fsdp=("data",), tp="model"))
+    assert specs["embed"] == P("model", "data")
+    assert specs["lm_head"] == P("data", "model")
+    # stacked layers get a leading None
+    seg = specs["segments"][0]
+    assert seg["attn"]["wq"] == P(None, "data", "model")
+    assert seg["attn"]["wo"] == P(None, "model", "data")
+    assert seg["ln1"] == P(None, None)          # norms replicate
+    # every spec rank matches its leaf rank
+    def chk(leaf, spec):
+        assert len(spec) <= leaf.ndim
+    jax.tree.map(chk, p, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_param_specs_serving_tp_only(qwen_structs):
+    """Empty fsdp -> weight-stationary serving sharding (It-8)."""
+    _, _, p, _ = qwen_structs
+    specs = param_specs(p, MeshAxes(fsdp=(), tp="model"))
+    assert specs["embed"] == P("model", None)
+    assert specs["segments"][0]["attn"]["wq"] == P(None, None, "model")
+
+
+def test_param_specs_multipod_fsdp(qwen_structs):
+    _, _, p, _ = qwen_structs
+    specs = param_specs(p, MeshAxes(fsdp=("pod", "data"), tp="model"))
+    assert specs["embed"] == P("model", ("pod", "data"))
+
+
+def test_moe_expert_specs():
+    cfg = get_config("deepseek_v2_236b")
+    model = Model(cfg, expert_pad=16, vocab_pad=128)
+    p = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0),
+                                          dtype=jnp.bfloat16))
+    specs = param_specs(p, MeshAxes(fsdp=("data",), tp="model"))
+    moe = specs["segments"][1]["moe"]
+    assert moe["w_gate"] == P(None, "model", "data", None)   # experts -> EP
+    assert moe["w_down"] == P(None, "model", None, "data")
+
+
+def test_cache_specs_batch_vs_seq_sharding(qwen_structs):
+    cfg, model, _, c = qwen_structs
+    mesh_shape = {"data": 16, "model": 16}
+    axes = MeshAxes(fsdp=("data",), tp="model")
+    # batch 128 over 16 -> batch-sharded; kv=8 not divisible by 16 ->
+    # heads replicated
+    specs = cache_specs(cfg, c, axes, 128, mesh_shape)
+    k_spec = specs["segments"][0]["k"]
+    assert k_spec == P(None, "data", None, None, None)
+    # batch 1 -> sequence-sharded flash-decode
+    c1 = jax.eval_shape(lambda: model.init_cache(1, 1024,
+                                                 dtype=jnp.bfloat16))
+    specs1 = cache_specs(cfg, c1, axes, 1, mesh_shape)
+    assert specs1["segments"][0]["k"] == P(None, None, "data", None, None)
+    # tp=4 divides kv=8 -> heads shard too
+    specs4 = cache_specs(cfg, c, axes, 128, {"data": 64, "model": 4})
+    assert specs4["segments"][0]["k"] == P(None, "data", None, "model", None)
