@@ -12,6 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.exchange import broadcast_table, broadcast_table_p2p
 from repro.core.table import Table
+from repro.core.compat import make_mesh, shard_map
 
 from .common import emit, time_fn
 
@@ -19,8 +20,7 @@ N = 8
 
 
 def main():
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
     for lg in (12, 15, 18):
         rows = 1 << lg
         stats_holder = {}
@@ -38,8 +38,8 @@ def main():
                         out, st = broadcast_table(t, "data", N)
                     stats_holder[p2p] = st
                     return out.count.reshape(1)
-                return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                     out_specs=P("data"), check_vma=False)(x)
+                return shard_map(body, mesh=mesh, in_specs=P("data"),
+                                 out_specs=P("data"))(x)
             return run
 
         x = jnp.zeros((N,), jnp.int32)

@@ -15,6 +15,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import perfmodel as pm
 from repro.core.exchange import broadcast_table, shuffle
 from repro.core.table import Table
+from repro.core.compat import make_mesh, shard_map
 
 from .common import emit, time_fn
 
@@ -29,8 +30,7 @@ def _mktable(rows: int) -> Table:
 
 
 def main():
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
     meas = {"shuffle": [], "broadcast": []}
     for lg in SIZES_LOG2:
         rows = 1 << lg
@@ -43,8 +43,8 @@ def main():
                 out, ov, _, _ = shuffle(t, t["k"] + key0, "data", N,
                                         cap_per_dest=rows // N * 4)
                 return out.count.reshape(1)
-            return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                 out_specs=P("data"), check_vma=False)(
+            return shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"))(
                 jnp.zeros((N,), jnp.int64))
 
         @jax.jit
@@ -53,8 +53,8 @@ def main():
                 t = _mktable(rows)
                 out, _ = broadcast_table(t, "data", N)
                 return out.count.reshape(1)
-            return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                 out_specs=P("data"), check_vma=False)(
+            return shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"))(
                 jnp.zeros((N,), jnp.int64))
 
         t_sh = time_fn(do_shuffle, jnp.asarray(0, jnp.int64), iters=5)

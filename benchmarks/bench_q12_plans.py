@@ -15,6 +15,7 @@ from repro.core.table import days
 from repro.data import tpch
 from repro.queries import QUERIES
 from repro.queries.q01_08 import _in
+from repro.core.compat import make_mesh
 
 from .common import emit, time_fn
 
@@ -64,8 +65,7 @@ def q12_pb(ctx):
 
 
 def main():
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
     db = tpch.generate(0.01, seed=11)
     ref, _ = B.run_reference(QUERIES[12], db)
 

@@ -17,6 +17,7 @@ from repro.core.exchange import broadcast_table, shuffle
 from repro.core.table import Table
 from repro.data import jcch, tpch
 from repro.queries import QUERIES
+from repro.core.compat import make_mesh, shard_map
 
 from .common import emit, time_fn
 
@@ -31,8 +32,7 @@ def _skewed_counts(f: float) -> np.ndarray:
 
 
 def main():
-    mesh = jax.make_mesh((N,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
     cap = BASE_ROWS * 4
     for f in (0.0, 0.5, 1.0, 2.0):
         counts = _skewed_counts(f)
@@ -47,8 +47,8 @@ def main():
                 out, ov, _, _ = shuffle(t, t["k"], "data", N,
                                         cap_per_dest=cap)
                 return out.count.reshape(1)
-            return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                 out_specs=P("data"), check_vma=False)(cnts)
+            return shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"))(cnts)
 
         @jax.jit
         def do_broadcast(cnts):
@@ -58,8 +58,8 @@ def main():
                           c[0].astype(jnp.int32))
                 out, _ = broadcast_table(t, "data", N)
                 return out.count.reshape(1)
-            return jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                                 out_specs=P("data"), check_vma=False)(cnts)
+            return shard_map(body, mesh=mesh, in_specs=P("data"),
+                             out_specs=P("data"))(cnts)
 
         arg = jnp.asarray(counts)
         t_sh = time_fn(do_shuffle, arg, iters=3)

@@ -1,0 +1,117 @@
+"""Sort-tax benchmark: HLO ``sort`` op counts + wall clock for representative
+TPC-H local plans (Q1 scan-heavy, Q3 join+topk, Q9 multi-join), vs the seed
+engine's numbers.
+
+The seed engine paid an O(cap log cap) argsort in every filter (compaction),
+every join (build re-sort) and one argsort per ORDER BY key; this benchmark
+guards the deferred-compaction / single-sort / build-cache rework against
+regression.  Run:
+
+    PYTHONPATH=src python benchmarks/bench_sort_tax.py [--check] [--sf 0.01]
+
+Writes ``BENCH_sort_tax.json`` at the repo root.  ``--check`` exits non-zero
+unless every query's HLO sort count is down >= 40% vs the seed (the CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as B
+from repro.core import relational as rel
+from repro.core.table import Table
+from repro.data import tpch
+from repro.distributed.hlo_analysis import op_histogram
+from repro.queries import QUERIES
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_sort_tax.json")
+
+BENCH_QUERIES = (1, 3, 9)
+
+# Seed-engine numbers, measured at sf=0.01 seed=7 on the pre-optimization
+# commit (eager compaction, per-key sort passes, per-join build sorts) with
+# the same best-of-9 protocol used below.
+SEED_BASELINE = {
+    "q1": {"sort_ops": 4, "wall_ms": 81.3},
+    "q3": {"sort_ops": 10, "wall_ms": 140.0},
+    "q9": {"sort_ops": 12, "wall_ms": 142.0},
+}
+
+MIN_SORT_DROP = 0.40
+
+
+def _compile_and_time(db, tables, qid: int, join_method: str,
+                      iters: int = 9):
+    def run(tables):
+        ctx = B.LocalContext(db, tables, join_method=join_method)
+        out = QUERIES[qid](ctx)
+        if isinstance(out, dict):
+            out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
+                        jnp.asarray(1, jnp.int32))
+        return rel.ensure_compact(out), ctx.overflow
+
+    fn = jax.jit(run)
+    compiled = fn.lower(tables).compile()
+    nsort = op_histogram(compiled.as_text(), ops=("sort",))["sort"]
+    jax.block_until_ready(fn(tables))          # warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(tables))
+        ts.append(time.perf_counter() - t0)
+    # best-of-N: the engines are deterministic, so min suppresses scheduler
+    # noise that medians on a shared host do not
+    return nsort, min(ts) * 1e3
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless sort drop >= 40%% per query")
+    args = ap.parse_args()
+
+    db = tpch.generate(args.sf, seed=args.seed)
+    tables = B._np_db_to_tables(db)
+
+    report = {"sf": args.sf, "seed_baseline": SEED_BASELINE, "queries": {}}
+    ok = True
+    for qid in BENCH_QUERIES:
+        nsort, wall_ms = _compile_and_time(db, tables, qid, "sorted")
+        _, wall_hash = _compile_and_time(db, tables, qid, "hash")
+        seed = SEED_BASELINE[f"q{qid}"]
+        drop = 1.0 - nsort / seed["sort_ops"]
+        speedup = seed["wall_ms"] / wall_ms
+        report["queries"][f"q{qid}"] = {
+            "sort_ops": nsort,
+            "seed_sort_ops": seed["sort_ops"],
+            "sort_drop": round(drop, 3),
+            "wall_ms": round(wall_ms, 2),
+            "wall_ms_hash_join": round(wall_hash, 2),
+            "seed_wall_ms": seed["wall_ms"],
+            "speedup_vs_seed": round(speedup, 2),
+        }
+        ok &= drop >= MIN_SORT_DROP
+        print(f"q{qid}: sorts {seed['sort_ops']} -> {nsort} "
+              f"({drop:.0%} drop), wall {seed['wall_ms']:.1f} -> "
+              f"{wall_ms:.1f} ms ({speedup:.2f}x)  [hash-join {wall_hash:.1f} ms]",
+              flush=True)
+
+    report["min_sort_drop"] = MIN_SORT_DROP
+    report["pass"] = bool(ok)
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {OUT_PATH}  pass={ok}")
+    if args.check and not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ import jax
 from repro.data import tpch
 from repro.distributed.fault import QueryRunner
 from repro.queries import QUERIES
+from repro.core.compat import make_mesh
 
 
 def main():
@@ -27,8 +28,7 @@ def main():
     args = ap.parse_args()
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n,), ("data",))
     print(f"devices={n}  scale factor={args.sf}")
     db = tpch.generate(args.sf, seed=7)
     runner = QueryRunner(db, mesh, capacity_factor=2.5)

@@ -13,6 +13,11 @@ Exchange placement is explicit in query code (``ctx.shuffle`` / ``ctx.broadcast`
 / ``exchange=`` on group_by) — mirroring the paper's manually-optimized tensor
 programs (§4.4) — and is counted identically on every backend so plan statistics
 (paper Table 4) can be produced without a cluster.
+
+``join_method`` selects the per-device join engine on the JAX backends:
+``"sorted"`` (searchsorted probe, always available) or ``"hash"`` (Pallas
+bucket-table probe); both paths are byte-identical (tests/test_sort_tax.py)
+and share the per-plan build-side cache on ``_BaseContext``.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
 from . import exchange as ex
 from . import reference as ref
 from . import relational as rel
@@ -92,13 +98,23 @@ _MERGE = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
 
 
 class _BaseContext:
-    """Shared bookkeeping + derived helpers."""
+    """Shared bookkeeping + derived helpers.
+
+    ``_join_cache`` is the per-query build-side cache: a (build table, key)
+    pair is indexed (sorted or bucket-hashed) at most once per plan, however
+    many joins probe it — dimension tables stop paying one build sort per
+    join.  The cache holds a strong reference to the build table so ``id()``
+    keys stay unique for the context's (= one plan's) lifetime.
+    """
+
+    join_method = "sorted"  # "sorted" (searchsorted) | "hash" (Pallas probe)
 
     def __init__(self, db: Database, capacity_factor: float = 2.0):
         self.db = db
         self.dicts = db.dicts
         self.stats = PlanStats()
         self.capacity_factor = capacity_factor
+        self._join_cache: dict[tuple, tuple] = {}
 
     # -- dictionary-encoded string predicates (TQP-style) ------------------
     def str_lookup(self, col: str, pred: Callable[[np.ndarray], np.ndarray]):
@@ -279,10 +295,12 @@ class LocalContext(_BaseContext):
     xp = jnp
     distributed = False
 
-    def __init__(self, db, tables: dict[str, Table], capacity_factor=2.0):
+    def __init__(self, db, tables: dict[str, Table], capacity_factor=2.0,
+                 join_method: str = "sorted"):
         super().__init__(db, capacity_factor)
         self._tables = tables
         self.overflow = jnp.asarray(False)
+        self.join_method = join_method
 
     def scan(self, name):
         return self._tables[name]
@@ -302,21 +320,47 @@ class LocalContext(_BaseContext):
             return t[on]
         return rel.combine_keys([t[c] for c in on])
 
+    def _build_index(self, build, build_on) -> rel.BuildIndex:
+        """Per-plan build cache: index each (build table, key) pair once."""
+        if isinstance(build_on, str):
+            on_desc = build_on
+        elif isinstance(build_on, (list, tuple)) and \
+                all(isinstance(c, str) for c in build_on):
+            on_desc = tuple(build_on)
+        else:  # raw key arrays etc. — build fresh rather than key by id()
+            idx = rel.build_index(build, self._key(build, build_on),
+                                  method=self.join_method)
+            self.overflow = self.overflow | idx.overflow
+            return idx
+        ck = (id(build), on_desc)
+        hit = self._join_cache.get(ck)
+        if hit is not None:
+            return hit[1]
+        idx = rel.build_index(build, self._key(build, build_on),
+                              method=self.join_method)
+        self.overflow = self.overflow | idx.overflow
+        self._join_cache[ck] = (build, idx)  # keep build alive: id() stability
+        return idx
+
     def join(self, probe, build, probe_on, build_on, take):
         return rel.join_unique(probe, build, self._key(probe, probe_on),
-                               self._key(build, build_on), take)
+                               self._key(build, build_on), take,
+                               index=self._build_index(build, build_on))
 
     def semi(self, probe, build, probe_on, build_on):
         return rel.semi_join(probe, build, self._key(probe, probe_on),
-                             self._key(build, build_on))
+                             self._key(build, build_on),
+                             index=self._build_index(build, build_on))
 
     def anti(self, probe, build, probe_on, build_on):
         return rel.anti_join(probe, build, self._key(probe, probe_on),
-                             self._key(build, build_on))
+                             self._key(build, build_on),
+                             index=self._build_index(build, build_on))
 
     def left(self, probe, build, probe_on, build_on, take, defaults):
         return rel.left_join(probe, build, self._key(probe, probe_on),
-                             self._key(build, build_on), take, defaults)
+                             self._key(build, build_on), take, defaults,
+                             index=self._build_index(build, build_on))
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
                  groups_hint=None):
@@ -363,7 +407,9 @@ class LocalContext(_BaseContext):
         if not replicated:
             self._count("gather")
         if sort_keys:
-            t = rel.sort_by(t, sort_keys)
+            t = rel.sort_by(t, sort_keys)   # sorted output is compact
+        else:
+            t = rel.ensure_compact(t)       # finalize is a contiguity boundary
         if limit is not None:
             t = rel.limit(t, limit)
         return t
@@ -381,8 +427,9 @@ class DistContext(LocalContext):
     distributed = True
 
     def __init__(self, db, tables, axis_name: str, num_partitions: int,
-                 capacity_factor=2.0, packed_exchange=True):
-        super().__init__(db, tables, capacity_factor)
+                 capacity_factor=2.0, packed_exchange=True,
+                 join_method: str = "sorted"):
+        super().__init__(db, tables, capacity_factor, join_method)
         self.axis = axis_name
         self.N = num_partitions
         self.packed = packed_exchange
@@ -468,6 +515,8 @@ class DistContext(LocalContext):
         if replicated:
             if sort_keys:
                 t = rel.sort_by(t, sort_keys)
+            else:
+                t = rel.ensure_compact(t)
             if limit is not None:
                 t = rel.limit(t, limit)
             return t
@@ -480,6 +529,8 @@ class DistContext(LocalContext):
         self.stats.log.append(stats)
         if sort_keys:
             t = rel.sort_by(t, sort_keys)
+        else:
+            t = rel.ensure_compact(t)
         if limit is not None:
             t = rel.limit(t, limit)
         return t
@@ -507,18 +558,19 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
     return out
 
 
-def run_local(query_fn, db: Database, jit: bool = True) -> tuple[dict, PlanStats]:
+def run_local(query_fn, db: Database, jit: bool = True,
+              join_method: str = "sorted") -> tuple[dict, PlanStats]:
     tables = _np_db_to_tables(db)
     holder = {}
 
     def run(tables):
-        ctx = LocalContext(db, tables)
+        ctx = LocalContext(db, tables, join_method=join_method)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
-        return out, ctx.overflow
+        return rel.ensure_compact(out), ctx.overflow
 
     fn = jax.jit(run) if jit else run
     out, overflow = fn(tables)
@@ -595,6 +647,7 @@ def partition_database(db: Database, n: int,
 def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
                     capacity_factor: float = 2.0, packed_exchange: bool = True,
                     partition_keys: dict | None = None,
+                    join_method: str = "sorted",
                     ) -> tuple[dict, PlanStats, Any]:
     """Run a query SPMD over ``mesh[axis]``; returns (result, stats, overflow).
 
@@ -610,19 +663,21 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
         for name, cols in tree.items():
             cnt = cols.pop("__count").reshape(())
             tables[name] = Table(cols, cnt)
-        ctx = DistContext(db, tables, axis, n, capacity_factor, packed_exchange)
+        ctx = DistContext(db, tables, axis, n, capacity_factor,
+                          packed_exchange, join_method)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
+        out = rel.ensure_compact(out)   # host extraction slices [0, count)
         return (Table(dict(out.columns), out.count.reshape(1)),
                 ctx.overflow.reshape(1))
 
     inp = {name: {k: jnp.asarray(v) for k, v in cols.items()}
            for name, cols in sharded.items()}
-    fn = jax.jit(jax.shard_map(spmd, mesh=mesh, in_specs=P(axis),
-                               out_specs=P(axis), check_vma=False))
+    fn = jax.jit(compat.shard_map(spmd, mesh=mesh, in_specs=P(axis),
+                                  out_specs=P(axis)))
     out, overflow = fn(inp)
     result = Table({k: v[: v.shape[0] // n] for k, v in out.columns.items()},
                    out.count[0])

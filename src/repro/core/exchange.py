@@ -18,6 +18,12 @@ Columns are exchanged either one at a time (paper-faithful, §2.3 "we exchange
 one column at a time") or packed into a single 32-bit-word buffer so the whole
 table moves in ONE collective (beyond-paper optimization; the paper's own
 Hockney model §3.6 predicts the win for small messages).
+
+Deferred compaction: exchange OUTPUTS are masked tables (received rows are
+front-packed per sender block; the validity mask exposes them without a sort).
+``broadcast_table`` INPUTS are compacted first — the gathered payload is
+reconstructed from per-shard counts alone, a true contiguity boundary;
+``shuffle`` inputs may stay masked (invalid rows route to a dropped bucket).
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .table import Table
-from .relational import compact, hash_partition_ids
+from .relational import ensure_compact, hash_partition_ids
 
 __all__ = [
     "ExchangeStats",
@@ -168,9 +174,11 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
             words += part.shape[1]
         n_coll = len(t.names)
 
+    # received rows are front-packed within each per-sender block; expose them
+    # through the deferred-compaction mask instead of paying a full sort here
     valid = (jnp.arange(N * cap_per_dest) % cap_per_dest) < \
         jnp.repeat(recv_counts, cap_per_dest)
-    out = compact(Table(cols, jnp.asarray(N * cap_per_dest, jnp.int32)), valid)
+    out = Table(cols, recv_counts.sum().astype(jnp.int32), valid)
 
     stats = ExchangeStats(
         kind="shuffle", participants=N,
@@ -200,6 +208,9 @@ def broadcast_table(t: Table, axis_name: str, num_partitions: int,
     all_gather == the ring broadcast of Eq. 1 on the ICI torus: every device
     streams its shard around the ring; N-1 hops of S/N bytes each.
     """
+    # the gathered payload is reconstructed from per-shard counts alone, so the
+    # payload must be front-compacted — this is a true contiguity boundary
+    t = ensure_compact(t)
     N, cap = num_partitions, t.capacity
     counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
     if packed:
@@ -222,7 +233,7 @@ def broadcast_table(t: Table, axis_name: str, num_partitions: int,
         n_coll = len(t.names)
 
     valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
-    out = compact(Table(cols, jnp.asarray(N * cap, jnp.int32)), valid)
+    out = Table(cols, counts.sum().astype(jnp.int32), valid)
     stats = ExchangeStats(kind="broadcast", participants=N,
                           message_bytes=cap * words * 4,
                           total_bytes=cap * words * 4 * (N - 1),
@@ -236,6 +247,7 @@ def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
     buffer — each shard transits every link once per hop instead of being
     pipelined, duplicating inter-node traffic exactly as the paper describes.
     Shows up in HLO as N-1 collective-permutes of the full shard."""
+    t = ensure_compact(t)
     N, cap = num_partitions, t.capacity
     buf, spec = pack_columns(t)
     counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
@@ -254,7 +266,7 @@ def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
     recv = recv[order].reshape(N * cap, -1)
     cols = unpack_columns(recv, spec)
     valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
-    out = compact(Table(cols, jnp.asarray(N * cap, jnp.int32)), valid)
+    out = Table(cols, counts.sum().astype(jnp.int32), valid)
     stats = ExchangeStats(kind="broadcast_p2p", participants=N,
                           message_bytes=cap * buf.shape[1] * 4,
                           total_bytes=cap * buf.shape[1] * 4 * (N - 1),

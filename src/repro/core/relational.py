@@ -1,18 +1,39 @@
 """Static-shape relational operators in pure JAX (the per-device TQP compute layer).
 
 TPU adaptation (DESIGN.md §2): no atomics / no dynamic shapes, so
-  * filter        = mask + stable-argsort compaction (sorting network)
-  * hash join     = sort build side + ``searchsorted`` probe (unique build keys —
-                    every TPC-H join is FK->PK once plans order probe/build sides)
-  * group-by      = sort + segment reduction; small known domains use the
-                    one-hot MXU kernel in ``repro.kernels.segsum``
-  * order-by      = multi-pass stable argsort with validity sentinels
+  * filter        = O(n) validity-mask merge (deferred compaction — no sort)
+  * hash join     = sorted-build ``searchsorted`` probe, or the Pallas
+                    bucket-table probe (``kernels/hash_probe``) behind a
+                    dispatch flag; build sides index once per plan via
+                    :class:`BuildIndex` (unique build keys — every TPC-H join
+                    is FK->PK once plans order probe/build sides)
+  * group-by      = ONE stable argsort over a packed int64 key + segment
+                    reductions reusing that order for every aggregate
+  * order-by      = ONE multi-operand stable ``lax.sort`` with validity
+                    sentinels (single HLO sort regardless of key count)
 
-Every op preserves the Table invariant: valid rows compacted to the front,
-``count`` = number of valid rows, capacity static.
+Deferred-compaction invariant
+-----------------------------
+Operators accept both compact (``valid is None``) and masked tables and
+preserve ``count == valid_mask().sum()``.  Mask-producing ops (``filter_rows``,
+``join_unique``, ``semi_join``, ``anti_join``) are sort-free; the O(cap log cap)
+front-compaction runs only where contiguity is genuinely required:
+``sort_by`` (output is ordered hence compact), ``limit`` / ``static_shrink``
+(slicing), and exchange payload packing (``exchange.broadcast_table``).
+
+Sort-count budget per operator (HLO ``sort`` ops; enforced by
+``benchmarks/bench_sort_tax.py`` and the CI regression gate):
+
+  filter_rows / semi / anti      0
+  join_unique / left_join        0 probe-side + 1 per *distinct* build index
+  group_aggregate                1
+  sort_by                        1 (any number of keys)
+  shuffle (exchange)             1 (destination ranking), output masked
+  compact / ensure_compact       1, boundaries only
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import jax
@@ -20,11 +41,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from .table import Table, KEY_SENTINEL
+# imported at module scope (not lazily inside traced code): the kernel module
+# materializes constants at import time, which must not happen under a trace
+from repro.kernels.hash_probe import ops as _hp_ops
 
 __all__ = [
     "compact",
+    "ensure_compact",
     "filter_rows",
     "combine_keys",
+    "BuildIndex",
+    "build_index",
+    "probe_index",
     "join_unique",
     "semi_join",
     "anti_join",
@@ -46,19 +74,33 @@ _HASH_C2 = np.uint64(0xC4CEB9FE1A85EC53)
 # ---------------------------------------------------------------------------
 
 def compact(t: Table, keep: jax.Array) -> Table:
-    """Move rows where ``keep & valid`` to the front; count = how many."""
+    """Move rows where ``keep & valid`` to the front; count = how many.
+
+    This is the expensive boundary operator (one stable argsort over the full
+    capacity) — hot paths defer it via masked tables (see module docstring).
+    """
     keep = keep & t.valid_mask()
     order = jnp.argsort(~keep, stable=True)  # keep=True rows first, stable
     cols = {k: v[order] for k, v in t.columns.items()}
     return Table(cols, keep.sum().astype(jnp.int32))
 
 
+def ensure_compact(t: Table) -> Table:
+    """Materialize the front-compaction of a masked table (no-op if compact)."""
+    if t.valid is None:
+        return t
+    return compact(t, t.valid)
+
+
 def filter_rows(t: Table, mask: jax.Array) -> Table:
-    return compact(t, mask)
+    """O(n) filter: merge ``mask`` into the validity mask — no sort."""
+    keep = mask & t.valid_mask()
+    return Table(dict(t.columns), keep.sum().astype(jnp.int32), keep)
 
 
 def limit(t: Table, n: int) -> Table:
     """First n valid rows (callers sort first).  Statically shrinks capacity."""
+    t = ensure_compact(t)
     cols = {k: v[:n] for k, v in t.columns.items()}
     return Table(cols, jnp.minimum(t.count, n).astype(jnp.int32))
 
@@ -70,6 +112,7 @@ def static_shrink(t: Table, new_capacity: int) -> tuple[Table, jax.Array]:
     with a larger capacity — the static-shape analogue of the paper's
     size-metadata exchange guarding receive-buffer allocation.
     """
+    t = ensure_compact(t)
     overflow = t.count > new_capacity
     cols = {k: v[:new_capacity] for k, v in t.columns.items()}
     return Table(cols, jnp.minimum(t.count, new_capacity).astype(jnp.int32)), overflow
@@ -79,12 +122,28 @@ def static_shrink(t: Table, new_capacity: int) -> tuple[Table, jax.Array]:
 # keys
 # ---------------------------------------------------------------------------
 
-def combine_keys(cols: Sequence[jax.Array]) -> jax.Array:
-    """Pack two non-negative int key columns (< 2^31 each) into one int64.
+def combine_keys(cols: Sequence[jax.Array], bits: Sequence[int] | None = None,
+                 ) -> jax.Array:
+    """Pack non-negative int key columns into one int64 sort/group/join key.
 
-    More than two keys must be packed explicitly by the plan (e.g.
-    ``(brand*NTYPES + type)*NSIZES + size``) so collision-freedom is provable.
+    Without ``bits``: exactly the seed behavior — at most two columns
+    (< 2^31 each) packed with 32-bit shifts; more must be packed explicitly by
+    the plan so collision-freedom is provable.
+
+    With ``bits``: any number of columns, ``bits[i]`` the provable width of
+    column i (``0 <= cols[i] < 2^bits[i]``), ``sum(bits) <= 63`` — the plan
+    states its widths and gets a single collision-free key for one-sort
+    multi-column ORDER BY / GROUP BY.
     """
+    if bits is not None:
+        if len(bits) != len(cols):
+            raise ValueError("combine_keys: len(bits) != len(cols)")
+        if sum(bits) > 63:
+            raise ValueError(f"combine_keys: {sum(bits)} key bits > 63")
+        k = jnp.zeros_like(cols[0], dtype=_I64)
+        for c, b in zip(cols, bits):
+            k = (k << b) | c.astype(_I64)
+        return k
     if len(cols) > 2:
         raise ValueError("pack >2 keys explicitly in the plan (collision safety)")
     k = cols[0].astype(_I64)
@@ -94,7 +153,7 @@ def combine_keys(cols: Sequence[jax.Array]) -> jax.Array:
 
 
 def _valid_key(t: Table, key: jax.Array) -> jax.Array:
-    """Key column with padding rows forced to the +inf sentinel."""
+    """Key column with invalid rows forced to the +inf sentinel."""
     return jnp.where(t.valid_mask(), key.astype(_I64), KEY_SENTINEL)
 
 
@@ -111,56 +170,123 @@ def hash_partition_ids(key: jax.Array, num_partitions: int) -> jax.Array:
 # joins (unique build side)
 # ---------------------------------------------------------------------------
 
-def _probe(probe_key: jax.Array, probe_valid: jax.Array,
-           build: Table, build_key: jax.Array):
-    """Sorted-build searchsorted probe.  Returns (matched, build_row_idx)."""
+@dataclasses.dataclass
+class BuildIndex:
+    """Reusable probe structure over a unique-key build side.
+
+    Built once per (build table, key) pair and cached per plan by the backend
+    contexts, so a dimension table probed by several joins pays its build sort
+    once.  Two methods:
+
+      * ``sorted``: keys sorted once, probes are ``searchsorted`` (pure JAX —
+        the always-available fallback).
+      * ``hash``: (B, C) bucket table of 32-bit key planes probed by the
+        Pallas kernel in ``repro.kernels.hash_probe`` — fixed probe length,
+        no log-factor, bucket table VMEM-resident on TPU.
+    """
+
+    method: str
+    capacity: int
+    overflow: jax.Array
+    # sorted
+    sorted_keys: jax.Array | None = None
+    sorted_rows: jax.Array | None = None
+    # hash (two int32 planes hold the full 64-bit key)
+    bk_lo: jax.Array | None = None
+    bk_hi: jax.Array | None = None
+    bvals: jax.Array | None = None
+
+
+def build_index(build: Table, build_key: jax.Array, method: str = "sorted",
+                bucket_cap: int = 16) -> BuildIndex:
+    """Index the build side of a unique-key join (one argsort either way)."""
     bkey = _valid_key(build, build_key)
-    order = jnp.argsort(bkey)
-    bkey_sorted = bkey[order]
+    if method == "sorted":
+        order = jnp.argsort(bkey)
+        return BuildIndex("sorted", build.capacity, jnp.asarray(False),
+                          sorted_keys=bkey[order], sorted_rows=order)
+    if method != "hash":
+        raise ValueError(f"unknown join method {method!r}")
+    rows = jnp.arange(build.capacity, dtype=jnp.int32)
+    buckets = max(128, _hp_ops.next_pow2(2 * max(1, build.capacity)) // 4)
+    bk_lo, bk_hi, bv, ov = _hp_ops.build_bucket_table64(
+        bkey, rows, buckets, cap=bucket_cap, valid=bkey != KEY_SENTINEL)
+    return BuildIndex("hash", build.capacity, ov,
+                      bk_lo=bk_lo, bk_hi=bk_hi, bvals=bv)
+
+
+def probe_index(index: BuildIndex, probe_key: jax.Array,
+                probe_valid: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Probe an index.  Returns (matched, build_row_idx); idx arbitrary where
+    unmatched (callers mask through ``matched``)."""
     pk = probe_key.astype(_I64)
-    pos = jnp.searchsorted(bkey_sorted, pk)
-    pos = jnp.minimum(pos, build.capacity - 1)
-    matched = (bkey_sorted[pos] == pk) & probe_valid & (pk != KEY_SENTINEL)
-    return matched, order[pos]
+    if index.method == "sorted":
+        pos = jnp.searchsorted(index.sorted_keys, pk)
+        pos = jnp.minimum(pos, index.capacity - 1)
+        matched = (index.sorted_keys[pos] == pk) & probe_valid & \
+            (pk != KEY_SENTINEL)
+        return matched, index.sorted_rows[pos]
+    row = _hp_ops.hash_probe64(pk, index.bk_lo, index.bk_hi, index.bvals)
+    matched = (row >= 0) & probe_valid & (pk != KEY_SENTINEL)
+    return matched, jnp.maximum(row, 0)
+
+
+def _probe(probe_key: jax.Array, probe_valid: jax.Array,
+           build: Table, build_key: jax.Array, index: BuildIndex | None,
+           method: str):
+    if index is None:
+        index = build_index(build, build_key, method)
+    return probe_index(index, probe_key, probe_valid)
 
 
 def join_unique(probe: Table, build: Table, probe_on: jax.Array,
-                build_on: jax.Array, take: Sequence[str]) -> Table:
+                build_on: jax.Array, take: Sequence[str],
+                index: BuildIndex | None = None,
+                method: str = "sorted") -> Table:
     """Inner join; ``build`` keys must be unique among valid rows.
 
-    Output = probe rows that matched, plus ``take`` columns gathered from build.
-    Output capacity = probe capacity (FK->PK join never expands the probe side).
+    Output = probe rows that matched (as a masked table — no compaction),
+    plus ``take`` columns gathered from build.  Output capacity = probe
+    capacity (FK->PK join never expands the probe side).
     """
-    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on)
+    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on,
+                           index, method)
     cols = dict(probe.columns)
     for name in take:
         if name in cols:
             raise ValueError(f"join output column collision: {name}")
         cols[name] = build[name][bidx]
-    return compact(Table(cols, probe.count), matched)
+    return Table(cols, matched.sum().astype(jnp.int32), matched)
 
 
-def semi_join(probe: Table, build: Table, probe_on, build_on) -> Table:
-    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on)
-    return compact(probe, matched)
+def semi_join(probe: Table, build: Table, probe_on, build_on,
+              index: BuildIndex | None = None, method: str = "sorted") -> Table:
+    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on,
+                        index, method)
+    return Table(dict(probe.columns), matched.sum().astype(jnp.int32), matched)
 
 
-def anti_join(probe: Table, build: Table, probe_on, build_on) -> Table:
-    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on)
-    return compact(probe, ~matched & probe.valid_mask())
+def anti_join(probe: Table, build: Table, probe_on, build_on,
+              index: BuildIndex | None = None, method: str = "sorted") -> Table:
+    matched, _ = _probe(probe_on, probe.valid_mask(), build, build_on,
+                        index, method)
+    keep = ~matched & probe.valid_mask()
+    return Table(dict(probe.columns), keep.sum().astype(jnp.int32), keep)
 
 
 def left_join(probe: Table, build: Table, probe_on, build_on,
-              take: Sequence[str], defaults: dict[str, float | int]) -> Table:
+              take: Sequence[str], defaults: dict[str, float | int],
+              index: BuildIndex | None = None, method: str = "sorted") -> Table:
     """Left outer join; unmatched probe rows take ``defaults``; adds ``__matched``."""
-    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on)
+    matched, bidx = _probe(probe_on, probe.valid_mask(), build, build_on,
+                           index, method)
     cols = dict(probe.columns)
     for name in take:
         gathered = build[name][bidx]
         cols[name] = jnp.where(matched, gathered,
                                jnp.asarray(defaults[name], dtype=gathered.dtype))
     cols["__matched"] = matched
-    return Table(cols, probe.count)
+    return Table(cols, probe.count, probe.valid)
 
 
 # ---------------------------------------------------------------------------
@@ -171,16 +297,21 @@ _MERGE_OP = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
 
 
 def group_aggregate(t: Table, key_cols: Sequence[str],
-                    aggs: Sequence[tuple[str, str, jax.Array | str | None]]) -> Table:
-    """Sort-based grouped aggregation.
+                    aggs: Sequence[tuple[str, str, jax.Array | str | None]],
+                    key_bits: Sequence[int] | None = None) -> Table:
+    """Sort-based grouped aggregation: exactly ONE stable argsort, whose order
+    is reused for every aggregate (segment reductions over the same segments).
 
     aggs: (out_name, op, values) with op in {sum,count,min,max}; ``values`` is an
     array (an expression over t), a column name, or None for count.
+    ``key_bits`` optionally gives provable per-column bit widths so >2 key
+    columns pack into the single int64 sort key (see ``combine_keys``).
     Output: key columns + agg columns; count = number of groups;
-    capacity preserved (n_groups <= count <= capacity).
+    capacity preserved (n_groups <= count <= capacity); output is compact.
     """
     cap = t.capacity
-    key = _valid_key(t, combine_keys([t[k] for k in key_cols])) if key_cols else \
+    key = _valid_key(t, combine_keys([t[k] for k in key_cols], bits=key_bits)) \
+        if key_cols else \
         jnp.where(t.valid_mask(), jnp.int64(0), KEY_SENTINEL)
     order = jnp.argsort(key)
     sk = key[order]
@@ -188,8 +319,8 @@ def group_aggregate(t: Table, key_cols: Sequence[str],
     first = jnp.concatenate([valid[:1], (sk[1:] != sk[:-1]) & valid[1:]])
     gid = jnp.cumsum(first.astype(jnp.int32)) - 1           # 0-based group id
     ngroups = first.sum().astype(jnp.int32)
-    # padding rows route to segment cap-1 which is provably not a valid group
-    # whenever padding exists (ngroups <= count <= cap-1); see tests.
+    # invalid rows route to segment cap-1 which is provably not a valid group
+    # whenever any invalid row exists (ngroups <= count <= cap-1); see tests.
     seg = jnp.where(valid, gid, cap - 1)
 
     out: dict[str, jax.Array] = {}
@@ -197,7 +328,7 @@ def group_aggregate(t: Table, key_cols: Sequence[str],
         v = t[k][order]
         fill = jnp.zeros((), v.dtype)
         # scatter-set: all rows of a group share the key value, so duplicate
-        # writes are benign; padding rows write the fill value into slot cap-1.
+        # writes are benign; invalid rows write the fill value into slot cap-1.
         out[k] = jnp.zeros((cap,), v.dtype).at[seg].set(jnp.where(valid, v, fill),
                                                         mode="drop")
     for out_name, op, values in aggs:
@@ -246,19 +377,22 @@ def _dtype_min(dt):
 def sort_by(t: Table, keys: Sequence[tuple[str, bool]]) -> Table:
     """ORDER BY; keys = [(column, ascending)], first key most significant.
 
-    Multi-pass stable argsort from least-significant key; padding rows always
-    sink to the back via sentinels.
+    ONE stable multi-operand ``lax.sort`` (lexicographic over all key columns
+    at once) instead of the seed's one argsort pass per key; invalid rows sink
+    to the back via sentinels in every key operand, so the output is compact.
     """
     valid = t.valid_mask()
-    order = jnp.arange(t.capacity)
-    for col, asc in reversed(list(keys)):
-        k = t[col][order]
-        v = valid[order]
+    operands = []
+    for col, asc in keys:
+        k = t[col]
         if jnp.issubdtype(k.dtype, jnp.floating):
-            k = jnp.where(v, k if asc else -k, np.inf)
+            k = jnp.where(valid, k if asc else -k, np.inf)
         else:
             k = k.astype(_I64)
-            k = jnp.where(v, k if asc else -k, KEY_SENTINEL)
-        step = jnp.argsort(k, stable=True)
-        order = order[step]
+            k = jnp.where(valid, k if asc else -k, KEY_SENTINEL)
+        operands.append(k)
+    iota = jnp.arange(t.capacity, dtype=jnp.int32)
+    res = jax.lax.sort(tuple(operands) + (iota,), num_keys=len(operands),
+                       is_stable=True)
+    order = res[-1]
     return Table({k: v[order] for k, v in t.columns.items()}, t.count)

@@ -1,13 +1,24 @@
 """Columnar tables with static row capacity — the tensor-format data model of TQP.
 
 A Table is a pytree of equal-length 1-D column arrays plus a dynamic valid-row
-``count``.  Rows ``[0, count)`` are valid; rows beyond are padding whose contents
-are unspecified.  Static capacity is the TPU/XLA adaptation of TQP's variable-size
-tensors (see DESIGN.md §2): every relational operator below preserves the invariant
-that valid rows are compacted to the front.
+``count``.  Static capacity is the TPU/XLA adaptation of TQP's variable-size
+tensors (see DESIGN.md §2).
 
-String columns are dictionary-encoded int32 codes; the dictionaries live host-side
-in the :class:`Database` (they are metadata, never traced).
+Row validity comes in two representations:
+
+  * **compact** (``valid is None``): rows ``[0, count)`` are valid, rows beyond
+    are padding — the invariant the seed engine maintained after every operator.
+  * **masked** (``valid`` is a boolean column): row ``i`` is valid iff
+    ``valid[i]``; ``count == valid.sum()``.  This is the *deferred compaction*
+    representation — filters and joins produce masked tables in O(n) instead of
+    paying an O(cap log cap) argsort per operator, and the front-compaction
+    runs only at boundaries that truly need contiguity (exchange payload
+    packing, ``finalize``, capacity shrink, ``limit``).
+
+``valid_mask()`` abstracts over both; every relational operator consumes either
+representation.  String columns are dictionary-encoded int32 codes; the
+dictionaries live host-side in the :class:`Database` (they are metadata, never
+traced).
 """
 from __future__ import annotations
 
@@ -35,19 +46,32 @@ KEY_SENTINEL = np.iinfo(np.int64).max
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Table:
-    """Dict of 1-D columns (same static length = capacity) + dynamic valid count."""
+    """Dict of 1-D columns (same static length = capacity) + dynamic valid count.
+
+    ``valid`` is the optional deferred-compaction mask (see module docstring):
+    None means rows [0, count) are valid and contiguous.
+    """
 
     columns: dict[str, jax.Array]
     count: jax.Array  # int32 scalar (or int on host)
+    valid: jax.Array | None = None  # bool (capacity,) or None = compact
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
-        return tuple(self.columns[n] for n in names) + (self.count,), names
+        children = tuple(self.columns[n] for n in names) + (self.count,)
+        if self.valid is not None:
+            children = children + (self.valid,)
+        return children, (names, self.valid is not None)
 
     @classmethod
-    def tree_unflatten(cls, names, children):
-        return cls(dict(zip(names, children[:-1])), children[-1])
+    def tree_unflatten(cls, aux, children):
+        names, has_valid = aux
+        if has_valid:
+            cols, count, valid = children[:-2], children[-2], children[-1]
+        else:
+            cols, count, valid = children[:-1], children[-1], None
+        return cls(dict(zip(names, cols)), count, valid)
 
     # -- convenience -----------------------------------------------------
     @property
@@ -55,6 +79,10 @@ class Table:
         if not self.columns:
             return 0
         return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def is_compact(self) -> bool:
+        return self.valid is None
 
     def __getitem__(self, name: str) -> jax.Array:
         return self.columns[name]
@@ -67,25 +95,30 @@ class Table:
         return tuple(sorted(self.columns))
 
     def valid_mask(self) -> jax.Array:
+        if self.valid is not None:
+            return self.valid
         return jnp.arange(self.capacity, dtype=jnp.int64) < self.count
 
     def replace(self, **cols: jax.Array) -> "Table":
         new = dict(self.columns)
         new.update(cols)
-        return Table(new, self.count)
+        return Table(new, self.count, self.valid)
 
     def select(self, *names: str) -> "Table":
-        return Table({n: self.columns[n] for n in names}, self.count)
+        return Table({n: self.columns[n] for n in names}, self.count, self.valid)
 
     def drop(self, *names: str) -> "Table":
-        return Table({k: v for k, v in self.columns.items() if k not in names}, self.count)
+        return Table({k: v for k, v in self.columns.items() if k not in names},
+                     self.count, self.valid)
 
     def rename(self, mapping: Mapping[str, str]) -> "Table":
-        return Table({mapping.get(k, k): v for k, v in self.columns.items()}, self.count)
+        return Table({mapping.get(k, k): v for k, v in self.columns.items()},
+                     self.count, self.valid)
 
     def with_count(self, count) -> "Table":
         return Table(dict(self.columns), jnp.asarray(count, dtype=jnp.int32)
-                     if not isinstance(count, (int, np.integer)) else count)
+                     if not isinstance(count, (int, np.integer)) else count,
+                     self.valid)
 
 
 @dataclasses.dataclass
@@ -152,6 +185,13 @@ def from_numpy(cols: Mapping[str, np.ndarray], capacity: int | None = None) -> T
 
 
 def to_numpy(t: Table) -> dict[str, np.ndarray]:
-    """Device Table -> exact-size host columns (drops padding)."""
+    """Device Table -> exact-size host columns (drops padding).
+
+    Masked tables are extracted by boolean indexing (preserving row order);
+    compact tables by slicing off the padding tail.
+    """
+    if t.valid is not None:
+        m = np.asarray(t.valid)
+        return {k: np.asarray(v)[m] for k, v in t.columns.items()}
     n = int(t.count)
     return {k: np.asarray(v)[:n] for k, v in t.columns.items()}

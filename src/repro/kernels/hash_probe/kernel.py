@@ -37,6 +37,31 @@ def _kernel(pk_ref, bk_ref, bv_ref, out_ref, *, blk: int, buckets: int,
     out_ref[...] = val[:, None]
 
 
+def bucket_of(lo: jax.Array, hi: jax.Array, buckets: int) -> jax.Array:
+    """Bucket id of a 64-bit key split into int32 (lo, hi) planes.
+
+    Shared by the pure-JAX build (ops.build_bucket_table64) and the probe
+    kernel below — both sides MUST hash identically.  The planes are combined
+    through a second murmur round (hash_combine-style): a plain ``lo ^ hi``
+    collapses packed two-column keys whose low word spans a small domain
+    (e.g. partkey<<32 | suppkey) into few distinct inputs."""
+    mixed = jax.lax.bitcast_convert_type(murmur32(hi), jnp.int32) ^ lo
+    return (murmur32(mixed) % jnp.uint32(buckets)).astype(jnp.int32)
+
+
+def _kernel64(plo_ref, phi_ref, bklo_ref, bkhi_ref, bv_ref, out_ref, *,
+              blk: int, buckets: int, cap: int):
+    lo = plo_ref[...][:, 0]                               # (blk,)
+    hi = phi_ref[...][:, 0]
+    b = bucket_of(lo, hi, buckets)
+    cand_lo = bklo_ref[...][b]                            # (blk, C) gathers
+    cand_hi = bkhi_ref[...][b]
+    cand_v = bv_ref[...][b]
+    hit = (cand_lo == lo[:, None]) & (cand_hi == hi[:, None])
+    val = jnp.max(jnp.where(hit, cand_v, -1), axis=1)     # unique build keys
+    out_ref[...] = val[:, None]
+
+
 def hash_probe_pallas(probe_keys: jax.Array, bkeys: jax.Array,
                       bvals: jax.Array, blk: int = 2048,
                       interpret: bool = False) -> jax.Array:
@@ -57,3 +82,33 @@ def hash_probe_pallas(probe_keys: jax.Array, bkeys: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
         interpret=interpret,
     )(probe_keys.reshape(n, 1).astype(jnp.int32), bkeys, bvals)[:, 0]
+
+
+def hash_probe64_pallas(probe_lo: jax.Array, probe_hi: jax.Array,
+                        bk_lo: jax.Array, bk_hi: jax.Array,
+                        bvals: jax.Array, blk: int = 2048,
+                        interpret: bool = False) -> jax.Array:
+    """64-bit-key probe: (n,) int32 lo/hi planes vs (B, C) plane pair.
+
+    Same partition-then-probe scheme as ``hash_probe_pallas``; full 64-bit
+    equality is checked in-kernel by comparing both planes, so int64 join keys
+    (including two-column keys packed by ``combine_keys``) probe exactly."""
+    n = probe_lo.shape[0]
+    buckets, cap = bk_lo.shape
+    assert n % blk == 0
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_kernel64, blk=blk, buckets=buckets, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((buckets, cap), lambda i: (0, 0)),   # resident
+            pl.BlockSpec((buckets, cap), lambda i: (0, 0)),   # resident
+            pl.BlockSpec((buckets, cap), lambda i: (0, 0)),   # resident
+        ],
+        out_specs=pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=interpret,
+    )(probe_lo.reshape(n, 1), probe_hi.reshape(n, 1),
+      bk_lo, bk_hi, bvals)[:, 0]

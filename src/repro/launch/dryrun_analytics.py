@@ -23,7 +23,9 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import backend as B
+from repro.core import compat
 from repro.core import perfmodel as pm
+from repro.core import relational as rel
 from repro.core.table import Table
 from repro.data import tpch
 from repro.distributed import hlo_analysis as ha
@@ -80,13 +82,13 @@ def dryrun_query(qid: int, db, mesh, capacity_factor=1.02,
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
+        out = rel.ensure_compact(out)
         return (Table(dict(out.columns), out.count.reshape(1)),
                 ctx.overflow.reshape(1))
 
     with mesh:
-        fn = jax.jit(jax.shard_map(
-            spmd, mesh=mesh,
-            in_specs=P(axis), out_specs=P(axis), check_vma=False))
+        fn = jax.jit(compat.shard_map(
+            spmd, mesh=mesh, in_specs=P(axis), out_specs=P(axis)))
         t0 = time.time()
         lowered = fn.lower(specs)
         compiled = lowered.compile()

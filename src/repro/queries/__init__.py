@@ -10,6 +10,14 @@ paper's plans under its §4.3 input partitioning:
 Exchange counts per plan are asserted against paper Table 4 in
 tests/test_plan_stats.py (Q11 deviates: our partitioning makes the group-by
 local where the paper shuffles — noted in DESIGN.md).
+
+Deferred compaction: intermediate tables a plan sees after ``ctx.filter`` /
+``ctx.join`` / ``ctx.semi`` / ``ctx.anti`` may be *masked* (valid-row mask,
+not front-compacted) — plans must not index rows positionally; row-positional
+operators (``ctx.finalize``, ``ctx.shrink``, broadcasts) compact internally.
+All column expressions (``with_col``, agg lambdas, dictionary lookups) run on
+garbage rows too, which is safe because garbage values are always drawn from
+previously valid rows and therefore stay in-domain for every LUT.
 """
 from .q01_08 import q1, q2, q3, q4, q5, q6, q7, q8
 from .q09_15 import q9, q10, q11, q12, q13, q14, q15

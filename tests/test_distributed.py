@@ -22,10 +22,10 @@ def _run(script: str, timeout=900):
 _PRELUDE = """
 import numpy as np, jax
 from repro.core import backend as B
+from repro.core.compat import make_mesh
 from repro.data import tpch
 from repro.queries import QUERIES
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 db = tpch.generate(0.005, seed=11)
 def check(qid, **kw):
     r_ref, _ = B.run_reference(QUERIES[qid], db)
@@ -96,10 +96,10 @@ def test_skewed_jcch_runs_and_matches():
     _run("""
 import numpy as np, jax
 from repro.core import backend as B
+from repro.core.compat import make_mesh
 from repro.data import jcch
 from repro.queries import QUERIES
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 db = jcch.generate(0.005, seed=11, skew=0.3)
 # partitioning by the SKEWED foreign key exposes the imbalance the paper's
 # Fig 20 reports (unique-PK partitioning stays balanced by construction)
@@ -130,11 +130,11 @@ def test_fault_runner_escalates_capacity():
     _run("""
 import numpy as np, jax
 from repro.core import backend as B
+from repro.core.compat import make_mesh
 from repro.data import tpch
 from repro.distributed.fault import QueryRunner
 from repro.queries import QUERIES
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 db = tpch.generate(0.005, seed=11)
 # absurdly small starting factor forces overflow -> escalation
 runner = QueryRunner(db, mesh, capacity_factor=0.05, max_attempts=8)
@@ -153,12 +153,12 @@ def test_sf1000_plan_compiles():
     """The paper's workload at SF=1000 lowers+compiles (shape-only)."""
     _run("""
 import jax, numpy as np
+from repro.core.compat import make_mesh
 from repro.data import tpch
 from repro.launch import dryrun_analytics as da
 db = tpch.generate(0.001, seed=7)
 db.scale = 1000.0
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rec = da.dryrun_query(6, db, mesh)
 assert rec["plan"]["allreduces"] == 1
 assert rec["hlo_bytes"] > 0

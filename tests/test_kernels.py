@@ -1,7 +1,6 @@
 """Pallas kernels: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -90,13 +89,19 @@ def test_flash_attention_noncausal():
                                rtol=3e-4, atol=3e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(10, 300), st.integers(2, 40))
-def test_segsum_property_conservation(n, g):
-    gids = jnp.asarray(np.random.default_rng(n * g).integers(0, g, n)
-                       .astype(np.int32))
-    vals = jnp.asarray(np.random.default_rng(n + g).normal(size=(n, 1))
-                       .astype(np.float32))
-    got = ss.segment_sum(gids, vals, g)
-    np.testing.assert_allclose(float(np.asarray(got).sum()),
-                               float(np.asarray(vals).sum()), atol=1e-3)
+def test_segsum_property_conservation():
+    pytest.importorskip("hypothesis")  # hypothesis is an optional dependency
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(10, 300), st.integers(2, 40))
+    def prop(n, g):
+        gids = jnp.asarray(np.random.default_rng(n * g).integers(0, g, n)
+                           .astype(np.int32))
+        vals = jnp.asarray(np.random.default_rng(n + g).normal(size=(n, 1))
+                           .astype(np.float32))
+        got = ss.segment_sum(gids, vals, g)
+        np.testing.assert_allclose(float(np.asarray(got).sum()),
+                                   float(np.asarray(vals).sum()), atol=1e-3)
+
+    prop()
