@@ -162,6 +162,13 @@ class _BaseContext:
         rank[np.argsort(d)] = np.arange(len(d))
         return self.xp.asarray(rank)[t[col]]
 
+    def dict_bits(self, col: str) -> int:
+        """Provable bit width of a dictionary-encoded column: codes lie in
+        ``[0, len(dict))``, so ``ceil(log2(len(dict)))`` bits bound the domain
+        — the host-side fact plans cite in ``key_bits=`` to unlock the
+        sortless direct-addressing group-by (see queries/__init__.py)."""
+        return max(1, math.ceil(math.log2(max(2, len(self.dicts[col])))))
+
     _YEAR_BASE = 0  # epoch day 0
 
     def year(self, t_or_col, col: str | None = None):
@@ -240,7 +247,8 @@ class RefContext(_BaseContext):
                              self._key(build, build_on), take, defaults)
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None):
+                 groups_hint=None, key_bits=None):
+        # key_bits is a JAX-engine planning hint; the oracle ignores it
         if exchange == "shuffle":
             self._count("shuffle")
         elif exchange == "gather":
@@ -296,11 +304,15 @@ class LocalContext(_BaseContext):
     distributed = False
 
     def __init__(self, db, tables: dict[str, Table], capacity_factor=2.0,
-                 join_method: str = "sorted"):
+                 join_method: str = "sorted", use_kernel: bool | None = None):
         super().__init__(db, capacity_factor)
         self._tables = tables
         self.overflow = jnp.asarray(False)
         self.join_method = join_method
+        # use_kernel=False runs aggregation/dispatch through the jnp oracle
+        # (the CI matrix leg); None -> REPRO_AGG_KERNEL env default
+        self.use_kernel = rel.agg_kernel_default() if use_kernel is None \
+            else use_kernel
 
     def scan(self, name):
         return self._tables[name]
@@ -363,13 +375,17 @@ class LocalContext(_BaseContext):
                              index=self._build_index(build, build_on))
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None):
+                 groups_hint=None, key_bits=None):
         if exchange == "shuffle":
             self._count("shuffle")
         elif exchange == "gather":
             self._count("gather" if final else "broadcast")
         aggs, avg_post = _expand_avg(list(aggs))
-        out = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        out, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
+                                      key_bits=key_bits,
+                                      use_kernel=self.use_kernel,
+                                      return_overflow=True)
+        self.overflow = self.overflow | ov
         if groups_hint is not None:
             out, ov = rel.static_shrink(out, min(out.capacity, groups_hint))
             self.overflow = self.overflow | ov
@@ -382,7 +398,8 @@ class LocalContext(_BaseContext):
     def agg_scalar(self, t, aggs):
         self._count("allreduce")
         aggs, avg_post = _expand_avg(list(aggs))
-        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs))
+        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs),
+                                use_kernel=self.use_kernel)
         out = {name: g[name][0] for name in g.names}
         for name in avg_post:
             out[name] = out[f"__{name}_s"] / jnp.maximum(out[f"__{name}_c"], 1)
@@ -428,8 +445,8 @@ class DistContext(LocalContext):
 
     def __init__(self, db, tables, axis_name: str, num_partitions: int,
                  capacity_factor=2.0, packed_exchange=True,
-                 join_method: str = "sorted"):
-        super().__init__(db, tables, capacity_factor, join_method)
+                 join_method: str = "sorted", use_kernel: bool | None = None):
+        super().__init__(db, tables, capacity_factor, join_method, use_kernel)
         self.axis = axis_name
         self.N = num_partitions
         self.packed = packed_exchange
@@ -440,7 +457,8 @@ class DistContext(LocalContext):
         keyv = t[key] if isinstance(key, str) else self._key(t, key)
         cap_per_dest = max(8, math.ceil(t.capacity * self.capacity_factor / self.N))
         out, ov, _, stats = ex.shuffle(t, keyv, self.axis, self.N, cap_per_dest,
-                                       packed=self.packed, dest_ids=dest_ids)
+                                       packed=self.packed, dest_ids=dest_ids,
+                                       use_kernel=self.use_kernel)
         self.stats.log.append(stats)
         self.overflow = self.overflow | ov
         return out
@@ -456,13 +474,19 @@ class DistContext(LocalContext):
 
     # -- distributed aggregation --------------------------------------------
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None):
+                 groups_hint=None, key_bits=None):
         """groups_hint: static bound on distinct groups (e.g. a dictionary
         domain) — shrinks the partial aggregate BEFORE the exchange, so a
         gather/shuffle of a wide scan's partial moves O(groups), not
-        O(scan capacity).  Overflow feeds the re-execution runner."""
+        O(scan capacity).  Overflow feeds the re-execution runner.
+        key_bits: provable per-column key bit widths — both the per-device
+        partial and the post-exchange merge run the sortless direct path."""
         aggs, avg_post = _expand_avg(list(aggs))
-        partial = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        partial, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
+                                          key_bits=key_bits,
+                                          use_kernel=self.use_kernel,
+                                          return_overflow=True)
+        self.overflow = self.overflow | ov
         if groups_hint is not None:
             partial, ov = rel.static_shrink(
                 partial, min(partial.capacity, groups_hint))
@@ -473,12 +497,14 @@ class DistContext(LocalContext):
             merge = [(name, _MERGE[op], name) for name, op, _ in aggs]
             if exchange == "shuffle":
                 self._count("shuffle")
-                keyv = rel.combine_keys([partial[k] for k in keys]) if len(keys) > 1 \
+                keyv = rel.combine_keys([partial[k] for k in keys],
+                                        bits=key_bits) if len(keys) > 1 \
                     else partial[keys[0]]
                 cap_per_dest = max(8, math.ceil(
                     partial.capacity * self.capacity_factor / self.N))
                 moved, ov, _, stats = ex.shuffle(partial, keyv, self.axis, self.N,
-                                                 cap_per_dest, packed=self.packed)
+                                                 cap_per_dest, packed=self.packed,
+                                                 use_kernel=self.use_kernel)
                 self.stats.log.append(stats)
                 self.overflow = self.overflow | ov
             elif exchange == "gather":
@@ -488,7 +514,13 @@ class DistContext(LocalContext):
                 self.stats.log.append(stats)
             else:
                 raise ValueError(exchange)
-            out = rel.group_aggregate(moved, keys, merge)
+            # the partial->global merge reuses the same provable widths, so a
+            # hinted group-by is sortless on BOTH sides of the exchange
+            out, ov = rel.group_aggregate(moved, keys, merge,
+                                          key_bits=key_bits,
+                                          use_kernel=self.use_kernel,
+                                          return_overflow=True)
+            self.overflow = self.overflow | ov
         for name in avg_post:
             cnt = jnp.maximum(out[f"__{name}_c"], 1)
             out = out.replace(**{name: out[f"__{name}_s"] / cnt})
@@ -498,7 +530,8 @@ class DistContext(LocalContext):
     def agg_scalar(self, t, aggs):
         self._count("allreduce")
         aggs, avg_post = _expand_avg(list(aggs))
-        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs))
+        g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs),
+                                use_kernel=self.use_kernel)
         partials = {name: g[name][0] for name in g.names}
         ops = {name: _MERGE[op] for name, op, _ in aggs}
         out = ex.partial_to_global(partials, ops, self.axis)
@@ -559,12 +592,14 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
 
 
 def run_local(query_fn, db: Database, jit: bool = True,
-              join_method: str = "sorted") -> tuple[dict, PlanStats]:
+              join_method: str = "sorted", use_kernel: bool | None = None,
+              ) -> tuple[dict, PlanStats]:
     tables = _np_db_to_tables(db)
     holder = {}
 
     def run(tables):
-        ctx = LocalContext(db, tables, join_method=join_method)
+        ctx = LocalContext(db, tables, join_method=join_method,
+                           use_kernel=use_kernel)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
@@ -648,6 +683,7 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
                     capacity_factor: float = 2.0, packed_exchange: bool = True,
                     partition_keys: dict | None = None,
                     join_method: str = "sorted",
+                    use_kernel: bool | None = None,
                     ) -> tuple[dict, PlanStats, Any]:
     """Run a query SPMD over ``mesh[axis]``; returns (result, stats, overflow).
 
@@ -664,7 +700,7 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
             cnt = cols.pop("__count").reshape(())
             tables[name] = Table(cols, cnt)
         ctx = DistContext(db, tables, axis, n, capacity_factor,
-                          packed_exchange, join_method)
+                          packed_exchange, join_method, use_kernel)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):

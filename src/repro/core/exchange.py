@@ -36,7 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .table import Table
-from .relational import ensure_compact, hash_partition_ids
+from .relational import agg_kernel_default, ensure_compact, hash_partition_ids
+# imported at module scope (not lazily inside traced code): the kernel module
+# materializes constants at import time, which must not happen under a trace
+from repro.kernels.radix_hist import ops as _rh_ops
 
 __all__ = [
     "ExchangeStats",
@@ -101,27 +104,29 @@ def unpack_columns(buf: jax.Array, spec) -> dict[str, jax.Array]:
 # shuffle
 # ---------------------------------------------------------------------------
 
-def _dispatch_offsets(dest: jax.Array, num_partitions: int, cap: int):
+def _dispatch_offsets(dest: jax.Array, num_partitions: int,
+                      use_kernel: bool | None = None):
     """Per-row (destination, slot) for capacity-bounded dispatch.
 
     Returns (slot, counts): ``slot[i]`` is row i's index within its destination
-    bucket, ``counts[d]`` the number of rows headed to d.  Rows are ranked by a
-    stable sort on destination (TPU-native; no atomics).
+    bucket, ``counts[d]`` the number of rows headed to d.  Rows are ranked by
+    a radix-histogram counting rank (``kernels/radix_hist.counting_rank``:
+    per-block histogram + prefix sum + per-row offset) — byte-identical slot
+    assignment to the previous stable destination sort, with ZERO sorts.
+    Destinations may include the drop bucket ``num_partitions`` (padding /
+    invalid rows); its rows are ranked too but excluded from ``counts``.
     """
-    order = jnp.argsort(dest, stable=True)            # rows grouped by dest
-    sorted_dest = dest[order]
-    counts = jax.ops.segment_sum(jnp.ones_like(dest, dtype=jnp.int32),
-                                 dest, num_segments=num_partitions + 1)[:num_partitions]
-    start = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                             jnp.cumsum(counts, dtype=jnp.int32)])
-    pos_in_group = jnp.arange(cap, dtype=jnp.int32) - start[jnp.minimum(sorted_dest, num_partitions)]
-    slot = jnp.zeros(cap, jnp.int32).at[order].set(pos_in_group)
-    return slot, counts
+    if use_kernel is None:
+        use_kernel = agg_kernel_default()
+    slot, counts = _rh_ops.counting_rank(dest, num_partitions + 1,
+                                         use_kernel=use_kernel)
+    return slot, counts[:num_partitions]
 
 
 def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
             cap_per_dest: int, packed: bool = True,
             dest_ids: jax.Array | None = None,
+            use_kernel: bool | None = None,
             ) -> tuple[Table, jax.Array, jax.Array, ExchangeStats]:
     """Repartition ``t`` by ``hash(key) % N`` across the mesh axis.
 
@@ -135,7 +140,7 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
     dest = jnp.where(t.valid_mask(),
                      hash_partition_ids(key, N) if dest_ids is None else dest_ids,
                      N)  # padding rows -> virtual bucket N (dropped)
-    slot, counts = _dispatch_offsets(dest, N, cap)
+    slot, counts = _dispatch_offsets(dest, N, use_kernel=use_kernel)
     overflow = jnp.any(counts > cap_per_dest)
 
     flat_idx = dest * cap_per_dest + jnp.minimum(slot, cap_per_dest - 1)

@@ -7,8 +7,11 @@ TPU adaptation (DESIGN.md §2): no atomics / no dynamic shapes, so
                     dispatch flag; build sides index once per plan via
                     :class:`BuildIndex` (unique build keys — every TPC-H join
                     is FK->PK once plans order probe/build sides)
-  * group-by      = ONE stable argsort over a packed int64 key + segment
-                    reductions reusing that order for every aggregate
+  * group-by      = sortless when the key domain is provably small (dense
+                    group ids + the ``kernels/segsum`` one-hot MXU reduce —
+                    aggregation-as-matmul); otherwise ONE stable argsort over
+                    a packed int64 key + segment reductions reusing that
+                    order for every aggregate
   * order-by      = ONE multi-operand stable ``lax.sort`` with validity
                     sentinels (single HLO sort regardless of key count)
 
@@ -26,14 +29,18 @@ Sort-count budget per operator (HLO ``sort`` ops; enforced by
 
   filter_rows / semi / anti      0
   join_unique / left_join        0 probe-side + 1 per *distinct* build index
-  group_aggregate                1
+  group_aggregate                0 with provable ``key_bits`` (packed domain
+                                 <= 2^13: direct addressing via the segsum
+                                 one-hot kernel) or no key columns (scalar
+                                 aggregation); 1 otherwise
   sort_by                        1 (any number of keys)
-  shuffle (exchange)             1 (destination ranking), output masked
+  shuffle (exchange)             0 (radix-hist counting rank), output masked
   compact / ensure_compact       1, boundaries only
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Sequence
 
 import jax
@@ -41,9 +48,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from .table import Table, KEY_SENTINEL
-# imported at module scope (not lazily inside traced code): the kernel module
-# materializes constants at import time, which must not happen under a trace
+# imported at module scope (not lazily inside traced code): the kernel modules
+# materialize constants at import time, which must not happen under a trace
 from repro.kernels.hash_probe import ops as _hp_ops
+from repro.kernels.segsum import ops as _ss_ops
+
+# Largest packed-key domain (2^bits) the direct-addressing aggregation will
+# take on: one-hot tiles are (blk, 2^bits) in VMEM, so 13 bits (8192 slots,
+# 64 lane-tiles) is the practical MXU ceiling; larger domains fall back to
+# the single-sort path.
+DIRECT_AGG_BITS_MAX = 13
+# Which engine backs the sortless reductions (segsum / radix_hist):
+#   REPRO_AGG_KERNEL=auto (default) — Pallas kernels on TPU, jnp
+#     scatter-reduce everywhere else.  Interpret-mode Pallas is a correctness
+#     vehicle, not a fast path: its grid loop re-slices full buffers per step,
+#     a 20-90x wall-clock tax on CPU — while the jnp path lowers to the same
+#     sort-free HLO, so the sort-tax win is identical.
+#   REPRO_AGG_KERNEL=1 — force the kernels (the CI leg that exercises them
+#     through all 22 query plans, in interpret mode off-TPU).
+#   REPRO_AGG_KERNEL=0 — force the jnp oracle (the CI leg that pins the
+#     kernels' reference semantics).
+# Resolved lazily on first use: probing jax.default_backend() at import time
+# would finalize the JAX backend as an import side effect, breaking drivers
+# that call jax.distributed.initialize() after importing repro.
+_AGG_KERNEL_CACHE: bool | None = None
+
+
+def agg_kernel_default() -> bool:
+    global _AGG_KERNEL_CACHE
+    if _AGG_KERNEL_CACHE is None:
+        env = os.environ.get("REPRO_AGG_KERNEL", "auto").lower()
+        if env in ("1", "true", "kernel"):
+            _AGG_KERNEL_CACHE = True
+        elif env in ("0", "false", "oracle"):
+            _AGG_KERNEL_CACHE = False
+        else:
+            _AGG_KERNEL_CACHE = jax.default_backend() == "tpu"
+    return _AGG_KERNEL_CACHE
 
 __all__ = [
     "compact",
@@ -296,19 +337,152 @@ def left_join(probe: Table, build: Table, probe_on, build_on,
 _MERGE_OP = {"sum": "sum", "count": "sum", "min": "min", "max": "max"}
 
 
+def _agg_value(t: Table, values, cap: int) -> jax.Array:
+    """Materialize an agg value spec (array | column name | None=ones)."""
+    if values is None:
+        return jnp.ones((cap,), dtype=jnp.int64)
+    if isinstance(values, str):
+        return t[values]
+    return values
+
+
 def group_aggregate(t: Table, key_cols: Sequence[str],
                     aggs: Sequence[tuple[str, str, jax.Array | str | None]],
-                    key_bits: Sequence[int] | None = None) -> Table:
-    """Sort-based grouped aggregation: exactly ONE stable argsort, whose order
-    is reused for every aggregate (segment reductions over the same segments).
+                    key_bits: Sequence[int] | None = None,
+                    method: str = "auto", use_kernel: bool | None = None,
+                    return_overflow: bool = False):
+    """Grouped aggregation; sortless when the key domain is provably small.
+
+    Two execution paths, selected by ``method``:
+
+      * ``"direct"`` — direct addressing: the packed key IS the dense group
+        id (domain ``2^sum(key_bits)``, which must be <= 2^13), aggregates
+        run through the ``kernels/segsum`` one-hot MXU reduce, and the dense
+        slots compact to the front via a cumsum rank — ZERO sorts.  Scalar
+        aggregation (no key columns) is the trivial domain-1 case.
+      * ``"sort"`` — the phase-1 engine: exactly ONE stable argsort whose
+        order is reused for every aggregate (segment reductions).
+      * ``"auto"`` (default) — direct when eligible, sort otherwise.
 
     aggs: (out_name, op, values) with op in {sum,count,min,max}; ``values`` is an
     array (an expression over t), a column name, or None for count.
-    ``key_bits`` optionally gives provable per-column bit widths so >2 key
-    columns pack into the single int64 sort key (see ``combine_keys``).
-    Output: key columns + agg columns; count = number of groups;
-    capacity preserved (n_groups <= count <= capacity); output is compact.
+    ``key_bits`` gives provable per-column bit widths (``0 <= t[k] < 2^bits``)
+    so >2 key columns pack into the single int64 key (see ``combine_keys``)
+    AND so the direct path can trust the domain bound.  A lying ``key_bits``
+    claim never silently drops groups: out-of-domain valid rows route to the
+    dead slot and raise the overflow flag (``return_overflow=True`` returns
+    ``(table, overflow)``; the backends feed it to the re-execution runner).
+    Output: key columns + agg columns; count = number of groups; group order
+    is ascending packed key on both paths; capacity preserved
+    (n_groups <= count <= capacity); output is compact.
+
+    Rows past ``count`` are unspecified and differ between paths: notably a
+    scalar min/max over ZERO valid rows leaves 0 at slot 0 on the direct
+    path (matching the NumPy oracle's empty convention) but the reduction
+    identity on the sort path — consumers must respect ``count``.
     """
+    if use_kernel is None:
+        use_kernel = agg_kernel_default()
+    direct_ok = (not key_cols) or (
+        key_bits is not None and sum(key_bits) <= DIRECT_AGG_BITS_MAX)
+    if method == "auto":
+        method = "direct" if direct_ok else "sort"
+    if method == "direct":
+        if not direct_ok:
+            raise ValueError("group_aggregate: direct path needs key_bits "
+                             f"with sum <= {DIRECT_AGG_BITS_MAX}")
+        out, overflow = _group_aggregate_direct(t, key_cols, aggs, key_bits,
+                                                use_kernel)
+    elif method == "sort":
+        out = _group_aggregate_sorted(t, key_cols, aggs, key_bits)
+        overflow = jnp.asarray(False)
+    else:
+        raise ValueError(f"unknown group_aggregate method {method!r}")
+    return (out, overflow) if return_overflow else out
+
+
+def _group_aggregate_direct(t: Table, key_cols: Sequence[str], aggs,
+                            key_bits: Sequence[int] | None,
+                            use_kernel: bool) -> tuple[Table, jax.Array]:
+    """Sortless path: dense gid = packed key; segsum kernel; cumsum compact."""
+    cap = t.capacity
+    valid = t.valid_mask()
+    if key_cols:
+        bits = list(key_bits)
+        dom = 1 << sum(bits)
+        key = combine_keys([t[k] for k in key_cols], bits=bits)
+        # the bits claim is checked PER COLUMN: an oversized value in a
+        # non-leading column would OR into its neighbor's bits and alias an
+        # in-range packed key, corrupting a group without tripping a range
+        # check on the packed key alone
+        in_dom = valid
+        for k, b in zip(key_cols, bits):
+            c = t[k]
+            in_dom = in_dom & (c >= 0) & (c < (1 << b))
+    else:
+        bits, dom = [], 1
+        key = jnp.zeros((cap,), _I64)
+        in_dom = valid
+    overflow = jnp.any(in_dom != valid)      # a valid row broke the bits claim
+    gid = jnp.where(in_dom, key, dom).astype(jnp.int32)   # dead slot = dom
+
+    # group occupancy doubles as every count aggregate
+    cnt = _ss_ops.segment_reduce(gid, None, dom, op="count",
+                                 use_kernel=use_kernel)               # (dom,)
+    nonempty = cnt > 0
+    ngroups = nonempty.sum().astype(jnp.int32)
+    # compact dense slots to the front WITHOUT a sort: cumsum rank preserves
+    # ascending-key order, so the output matches the sorted path row for row
+    dst = jnp.where(nonempty, jnp.cumsum(nonempty.astype(jnp.int32)) - 1, cap)
+
+    def _scatter(dom_vals: jax.Array) -> jax.Array:
+        return jnp.zeros((cap,), dom_vals.dtype).at[dst].set(dom_vals,
+                                                             mode="drop")
+
+    out: dict[str, jax.Array] = {}
+    # key columns decode from the slot index (packing is lossless in-domain)
+    shift = sum(bits)
+    for k, b in zip(key_cols, bits):
+        shift -= b
+        dom_keys = (jnp.arange(dom, dtype=_I64) >> shift) & ((1 << b) - 1)
+        out[k] = _scatter(dom_keys.astype(t[k].dtype))
+
+    # batch same-dtype sums into one multi-column kernel call
+    reduced: dict[str, jax.Array] = {}
+    sum_batches: dict = {}
+    for out_name, op, values in aggs:
+        if op == "count":
+            reduced[out_name] = cnt
+            continue
+        v = _agg_value(t, values, cap)
+        if op == "sum":
+            v = jnp.where(in_dom, v, jnp.zeros((), v.dtype))
+            sum_batches.setdefault(jnp.dtype(v.dtype), []).append((out_name, v))
+        elif op == "min":
+            v = jnp.where(in_dom, v, _dtype_max(v.dtype))
+            reduced[out_name] = _ss_ops.segment_reduce(
+                gid, v, dom, op="min", use_kernel=use_kernel)
+        elif op == "max":
+            v = jnp.where(in_dom, v, _dtype_min(v.dtype))
+            reduced[out_name] = _ss_ops.segment_reduce(
+                gid, v, dom, op="max", use_kernel=use_kernel)
+        else:
+            raise ValueError(f"unknown agg op {op!r}")
+    for dt, items in sum_batches.items():
+        stacked = jnp.stack([v for _, v in items], axis=1)
+        sums = _ss_ops.segment_reduce(gid, stacked, dom, op="sum",
+                                      use_kernel=use_kernel)
+        for i, (name, _) in enumerate(items):
+            reduced[name] = sums[:, i]
+    for out_name, _, _ in aggs:
+        out[out_name] = _scatter(reduced[out_name])
+    return Table(out, ngroups), overflow
+
+
+def _group_aggregate_sorted(t: Table, key_cols: Sequence[str], aggs,
+                            key_bits: Sequence[int] | None = None) -> Table:
+    """Sort-based path: exactly ONE stable argsort, whose order is reused for
+    every aggregate (segment reductions over the same segments)."""
     cap = t.capacity
     key = _valid_key(t, combine_keys([t[k] for k in key_cols], bits=key_bits)) \
         if key_cols else \
@@ -332,13 +506,7 @@ def group_aggregate(t: Table, key_cols: Sequence[str],
         out[k] = jnp.zeros((cap,), v.dtype).at[seg].set(jnp.where(valid, v, fill),
                                                         mode="drop")
     for out_name, op, values in aggs:
-        if values is None:
-            v = jnp.ones((cap,), dtype=jnp.int64)
-        elif isinstance(values, str):
-            v = t[values]
-        else:
-            v = values
-        v = v[order]
+        v = _agg_value(t, values, cap)[order]
         if op == "count":
             v = jnp.where(valid, 1, 0).astype(jnp.int64)
             out[out_name] = jax.ops.segment_sum(v, seg, num_segments=cap,

@@ -8,3 +8,13 @@ Each kernel package ships:
 On this CPU container kernels are validated with interpret=True; the BlockSpecs
 are sized for TPU v5e VMEM (~128 MiB/core budgeted conservatively at 64 MiB).
 """
+import jax
+
+
+def auto_interpret() -> bool:
+    """Shared interpret=None resolution: compile on TPU, interpret elsewhere.
+
+    Called at trace time (interpret is a static arg everywhere), so the
+    backend probe never runs at import.
+    """
+    return jax.default_backend() != "tpu"

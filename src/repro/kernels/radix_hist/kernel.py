@@ -1,13 +1,20 @@
-"""Radix-partition histogram kernel — shuffle capacity planning / skew stats.
+"""Radix-partition histogram kernel — shuffle capacity planning / skew stats
+/ counting-rank dispatch.
 
-For each row block, hash the (int32) key in-kernel and produce a per-block
-partition histogram (nblocks, P).  The per-block resolution is what the
-adaptive capacity planner and the skew monitor consume (paper §3.5: shuffle
-time = max over nodes of send/recv bytes — per-block histograms expose that
-before any data moves).
+For each row block, bin the (int32) key and produce a per-block partition
+histogram (nblocks, P).  The per-block resolution is what the adaptive
+capacity planner, the skew monitor, AND the shuffle dispatch rank consume
+(paper §3.5: shuffle time = max over nodes of send/recv bytes — per-block
+histograms expose that before any data moves; an exclusive prefix sum over
+the same histograms ranks every row within its partition without a sort).
 
-TPU adaptation: splitmix64 needs 64-bit integer multiplies the VPU lacks, so
-the in-kernel hash is the murmur3 32-bit finalizer (documented in DESIGN.md).
+Two binning modes:
+  * ``hashed=True``  — bin = murmur32(key) % parts (capacity planning over
+    raw join keys; splitmix64 needs 64-bit multiplies the VPU lacks, so the
+    in-kernel hash is the murmur3 32-bit finalizer, see DESIGN.md).
+  * ``hashed=False`` — bin = key % parts (keys are already destination ids,
+    e.g. the shuffle dispatch path where splitmix64 ran outside the kernel).
+
 Histogram accumulation is a one-hot + MXU matmul, like segsum.
 """
 from __future__ import annotations
@@ -30,9 +37,15 @@ def murmur32(k: jax.Array) -> jax.Array:
     return k
 
 
-def _kernel(key_ref, out_ref, *, blk: int, parts: int, width: int):
-    k = murmur32(key_ref[...])                            # (blk, 1) u32
-    pid = (k % jnp.uint32(parts)).astype(jnp.int32)
+def _bin(k: jax.Array, parts: int, hashed: bool) -> jax.Array:
+    if hashed:
+        return (murmur32(k) % jnp.uint32(parts)).astype(jnp.int32)
+    return (k.astype(jnp.uint32) % jnp.uint32(parts)).astype(jnp.int32)
+
+
+def _kernel(key_ref, out_ref, *, blk: int, parts: int, width: int,
+            hashed: bool):
+    pid = _bin(key_ref[...], parts, hashed)               # (blk, 1) i32
     iota = jax.lax.broadcasted_iota(jnp.int32, (blk, width), 1)
     onehot = (pid == iota).astype(jnp.float32)
     ones = jnp.ones((blk, 1), jnp.float32)
@@ -43,17 +56,19 @@ def _kernel(key_ref, out_ref, *, blk: int, parts: int, width: int):
 
 
 def radix_hist_pallas(keys: jax.Array, parts: int, width: int | None = None,
-                      blk: int = 2048, interpret: bool = False) -> jax.Array:
+                      blk: int = 2048, interpret: bool = False,
+                      hashed: bool = True) -> jax.Array:
     """keys (n,) int32 -> per-block histograms (n//blk, width) float32.
 
-    ``parts`` is the hash modulo; ``width`` (>= parts, default 128-padded) is
+    ``parts`` is the bin modulo; ``width`` (>= parts, default 128-padded) is
     the lane-aligned output width — columns beyond parts stay zero."""
     n = keys.shape[0]
     width = width or max(128, (parts + 127) // 128 * 128)
     assert n % blk == 0 and width >= parts
     grid = (n // blk,)
     return pl.pallas_call(
-        functools.partial(_kernel, blk=blk, parts=parts, width=width),
+        functools.partial(_kernel, blk=blk, parts=parts, width=width,
+                          hashed=hashed),
         grid=grid,
         in_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, width), lambda i: (i, 0)),

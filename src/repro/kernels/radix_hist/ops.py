@@ -1,4 +1,5 @@
-"""Public wrapper: padding + global/per-block histograms + skew stats."""
+"""Public wrapper: padding + global/per-block histograms + skew stats +
+counting-rank dispatch (the sortless shuffle ranking primitive)."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,22 +7,29 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import radix_hist_pallas
+from .kernel import _bin, radix_hist_pallas
 from .ref import radix_hist_ref
+from repro.kernels import auto_interpret
 
 _LANES = 128
 
 
-@partial(jax.jit, static_argnames=("parts", "blk", "interpret", "use_kernel"))
+@partial(jax.jit, static_argnames=("parts", "blk", "interpret", "use_kernel",
+                                   "hashed"))
 def radix_hist(keys: jax.Array, parts: int, blk: int = 2048,
-               interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+               interpret: bool | None = None, use_kernel: bool = True,
+               hashed: bool = True) -> jax.Array:
     """Per-block partition histograms (ceil(n/blk), parts).
 
     Padding rows hash to arbitrary partitions, so they are excluded by
     hashing a sentinel lane and subtracting its count — simpler: we pad with
     the first key so totals stay exact after subtracting the pad count from
-    that key's partition (done below).
+    that key's partition (done below).  ``hashed=False`` bins by ``key %
+    parts`` directly (keys are destination ids already).  ``interpret=None``
+    auto-selects: compiled on TPU, interpret mode elsewhere.
     """
+    if interpret is None:
+        interpret = auto_interpret()
     n = keys.shape[0]
     width = max(_LANES, (parts + _LANES - 1) // _LANES * _LANES)
     blk = min(blk, max(8, (n + 7) // 8 * 8))
@@ -31,16 +39,67 @@ def radix_hist(keys: jax.Array, parts: int, blk: int = 2048,
                           jnp.broadcast_to(keys[:1].astype(jnp.int32), (pad,))])
     if use_kernel:
         hist = radix_hist_pallas(k2, parts, width=width, blk=blk,
-                                 interpret=interpret)
+                                 interpret=interpret, hashed=hashed)
     else:
-        hist = radix_hist_ref(k2, parts, blk)
-    # subtract the duplicated pad rows from the last block
+        hist = radix_hist_ref(k2, parts, blk, hashed=hashed)
+    # subtract the duplicated pad rows from the last block (same binning
+    # as the kernel, via the shared _bin, so the two can never diverge)
     if pad:
-        from .kernel import murmur32
-        p0 = (murmur32(keys[:1].astype(jnp.int32)) %
-              jnp.uint32(parts)).astype(jnp.int32)
+        p0 = _bin(keys[:1].astype(jnp.int32), parts, hashed)
         hist = hist.at[-1, p0[0]].add(-float(pad))
     return hist[:, :parts]
+
+
+@partial(jax.jit, static_argnames=("parts", "blk", "interpret", "use_kernel"))
+def counting_rank(keys: jax.Array, parts: int, blk: int = 2048,
+                  interpret: bool | None = None, use_kernel: bool = True,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Stable counting rank — the sortless shuffle-dispatch primitive.
+
+    keys (n,) int in [0, parts) -> (slot, counts) where ``slot[i]`` is row
+    i's 0-based rank among earlier rows with the same key (exactly the
+    position a stable sort on key would assign within its key group) and
+    ``counts[p]`` the total rows with key p.  Three passes, no sort:
+
+      1. per-block histograms (the radix_hist MXU kernel, ``hashed=False``);
+      2. exclusive prefix sum over blocks per key -> block base offsets;
+      3. per-row offset: intra-block exclusive one-hot cumsum + base,
+         streamed block by block (``lax.map``) so the peak intermediate is
+         O(blk * parts), not O(n * parts).
+
+    Padding rows go to a reserved bin (``parts``).  Per-block kernel counts
+    (<= blk, f32-exact) are cast to int32 before any prefix arithmetic, so
+    ranks are exact for any n < 2^31 — matching the argsort this replaces.
+    """
+    if interpret is None:
+        interpret = auto_interpret()
+    n = keys.shape[0]
+    width = parts + 1                          # + reserved padding bin
+    wpad = max(_LANES, (width + _LANES - 1) // _LANES * _LANES)
+    blk = min(blk, max(8, (n + 7) // 8 * 8))
+    npad = (n + blk - 1) // blk * blk
+    k2 = jnp.concatenate([keys.astype(jnp.int32),
+                          jnp.full((npad - n,), parts, jnp.int32)])
+    if use_kernel:
+        hist = radix_hist_pallas(k2, width, width=wpad, blk=blk,
+                                 interpret=interpret, hashed=False)[:, :width]
+    else:
+        hist = radix_hist_ref(k2, width, blk, hashed=False)
+    hist = hist.astype(jnp.int32)              # exact: per-block counts <= blk
+    nb = npad // blk
+    base = jnp.concatenate([jnp.zeros((1, width), jnp.int32),
+                            jnp.cumsum(hist, axis=0)])[:-1]      # (nb, W)
+
+    def _block_rank(args):
+        kb, bb = args                                            # (blk,), (W,)
+        oh = (kb[:, None] == jnp.arange(width, dtype=jnp.int32)
+              ).astype(jnp.int32)                                # (blk, W)
+        rank = bb[None, :] + jnp.cumsum(oh, axis=0) - oh         # exclusive
+        return jnp.take_along_axis(rank, kb[:, None], axis=1)[:, 0]
+
+    slot = jax.lax.map(_block_rank, (k2.reshape(nb, blk), base)).reshape(npad)
+    counts = hist.sum(axis=0)[:parts]
+    return slot[:n], counts
 
 
 def skew_stats(keys: jax.Array, parts: int, **kw) -> dict:

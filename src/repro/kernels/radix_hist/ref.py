@@ -5,9 +5,14 @@ import jax.numpy as jnp
 from .kernel import murmur32
 
 
-def radix_hist_ref(keys: jax.Array, parts: int, blk: int) -> jax.Array:
+def radix_hist_ref(keys: jax.Array, parts: int, blk: int,
+                   hashed: bool = True) -> jax.Array:
     n = keys.shape[0]
-    pid = (murmur32(keys.astype(jnp.int32)) % jnp.uint32(parts)).astype(jnp.int32)
+    k = keys.astype(jnp.int32)
+    if hashed:
+        pid = (murmur32(k) % jnp.uint32(parts)).astype(jnp.int32)
+    else:
+        pid = (k.astype(jnp.uint32) % jnp.uint32(parts)).astype(jnp.int32)
     blocks = pid.reshape(n // blk, blk)
     return jax.vmap(lambda b: jnp.bincount(b, length=parts))(blocks).astype(
         jnp.float32)

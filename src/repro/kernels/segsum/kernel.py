@@ -9,6 +9,11 @@ This replaces the CUDA hash-table+atomics aggregation of GPU TQP: the TPU has
 no fast global atomics, but a 128x128 systolic matmul turns scatter-reduce
 into dense compute at ~100% MXU utilization when G is modest (dict-encoded
 group domains — exactly TPC-H's shape).
+
+``segment_minmax_pallas`` is the masked-reduce sibling for min/max: the same
+(BLK, G) one-hot tile selects values (identity elsewhere) and a VPU lane
+reduction folds each block into the (1, G) accumulator — grouped min/max with
+no sort and no atomics, completing the sortless aggregation operator set.
 """
 from __future__ import annotations
 
@@ -32,16 +37,18 @@ def _kernel(gid_ref, val_ref, out_ref, *, blk: int, groups: int):
     out_ref[...] += jax.lax.dot_general(
         onehot, val_ref[...],
         dimension_numbers=(((0,), (0,)), ((), ())),      # onehot^T @ vals
-        preferred_element_type=jnp.float32)
+        preferred_element_type=out_ref.dtype)
 
 
 def segment_sum_pallas(gids: jax.Array, values: jax.Array, groups: int,
                        blk: int = 1024, interpret: bool = False) -> jax.Array:
-    """gids (n,) int32 in [0, groups); values (n, C) f32 -> (G, C) sums.
+    """gids (n,) int32 in [0, groups); values (n, C) float -> (G, C) sums.
 
     Callers pad n to a multiple of blk and route padding rows to a dead group
     (ops.py handles both).  G and C should be multiples of 128 for MXU
-    alignment; VMEM working set = blk*(G + C)*4 + G*C*4 bytes.
+    alignment; VMEM working set = blk*(G + C)*4 + G*C*4 bytes.  Accumulation
+    dtype follows ``values.dtype`` (float32 on hardware; float64 is available
+    under interpret mode, where the MXU is emulated by jnp).
     """
     n, c = values.shape
     assert n % blk == 0, (n, blk)
@@ -54,6 +61,50 @@ def segment_sum_pallas(gids: jax.Array, values: jax.Array, groups: int,
             pl.BlockSpec((blk, c), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((groups, c), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((groups, c), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((groups, c), values.dtype),
         interpret=interpret,
     )(gids.reshape(n, 1).astype(jnp.int32), values)
+
+
+def _minmax_kernel(gid_ref, val_ref, out_ref, *, blk: int, groups: int,
+                   is_min: bool):
+    step = pl.program_id(0)
+    ident = jnp.asarray(jnp.inf if is_min else -jnp.inf, out_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref[...], ident)
+
+    gid = gid_ref[...]                                   # (blk, 1) int32
+    iota = jax.lax.broadcasted_iota(jnp.int32, (blk, groups), 1)
+    # one-hot select: group's own rows keep their value, everything else the
+    # reduction identity — a (blk, G) tile folded by a VPU lane reduction
+    masked = jnp.where(gid == iota, val_ref[...], ident)  # (blk, G)
+    red = (jnp.min if is_min else jnp.max)(masked, axis=0, keepdims=True)
+    out_ref[...] = (jnp.minimum if is_min else jnp.maximum)(out_ref[...], red)
+
+
+def segment_minmax_pallas(gids: jax.Array, values: jax.Array, groups: int,
+                          is_min: bool, blk: int = 1024,
+                          interpret: bool = False) -> jax.Array:
+    """gids (n,) int32 in [0, groups); values (n,) float -> (G,) min/max.
+
+    Empty groups hold the reduction identity (+/-inf); callers drop them (the
+    relational layer masks empty slots before compaction).
+    """
+    n = values.shape[0]
+    assert n % blk == 0, (n, blk)
+    grid = (n // blk,)
+    out = pl.pallas_call(
+        functools.partial(_minmax_kernel, blk=blk, groups=groups,
+                          is_min=is_min),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, groups), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, groups), values.dtype),
+        interpret=interpret,
+    )(gids.reshape(n, 1).astype(jnp.int32), values.reshape(n, 1))
+    return out[0]

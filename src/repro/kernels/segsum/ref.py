@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the one-hot MXU grouped aggregation kernel."""
+"""Pure-jnp oracle for the one-hot MXU grouped aggregation kernels."""
 import jax
 import jax.numpy as jnp
 
@@ -6,3 +6,17 @@ import jax.numpy as jnp
 def segment_sum_ref(gids: jax.Array, values: jax.Array, groups: int) -> jax.Array:
     return jax.ops.segment_sum(values.astype(jnp.float32),
                                gids.astype(jnp.int32), num_segments=groups)
+
+
+def segment_reduce_ref(gids: jax.Array, values: jax.Array, groups: int,
+                       op: str) -> jax.Array:
+    """Dtype-preserving scatter-reduce oracle; out-of-range gids are dropped
+    (XLA scatter drop semantics — the dead-slot convention of ops.py)."""
+    g = gids.astype(jnp.int32)
+    if op == "sum":
+        return jax.ops.segment_sum(values, g, num_segments=groups)
+    if op == "min":
+        return jax.ops.segment_min(values, g, num_segments=groups)
+    if op == "max":
+        return jax.ops.segment_max(values, g, num_segments=groups)
+    raise ValueError(f"unknown segment reduce op {op!r}")

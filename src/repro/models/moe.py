@@ -1,9 +1,10 @@
-"""Mixture-of-Experts with capacity-bounded sort-based dispatch.
+"""Mixture-of-Experts with capacity-bounded counting-rank dispatch.
 
 The dispatch is the SAME primitive as the SQL shuffle
 (``repro.core.exchange._dispatch_offsets``): rank tokens by destination
-(expert) with a stable sort, place into (E, C) capacity buckets, drop on
-overflow.  This is the deepest contact between the paper's technique and the
+(expert) with a sortless radix-histogram counting rank (stable-sort-order
+equivalent), place into (E, C) capacity buckets, drop on overflow.  This is
+the deepest contact between the paper's technique and the
 MoE architectures — a distributed SQL shuffle *is* a token dispatch with a
 data-dependent routing function (DESIGN.md §3).  With experts sharded over the
 ``model`` axis, GSPMD lowers the gather->expert-matmul->scatter into the same
@@ -59,7 +60,7 @@ def moe_forward(p, cfg: ArchConfig, x: jax.Array, padded_experts: int,
     # -- capacity dispatch (shared machinery with the SQL shuffle) ----------
     cap = max(8, int(t * k * capacity_factor / e + 0.999) // 8 * 8 + 8)
     dest = top_e.reshape(t * k).astype(jnp.int32)                # (T*k,)
-    slot, counts = _dispatch_offsets(dest, e, t * k)
+    slot, counts = _dispatch_offsets(dest, e)
     keep = slot < cap
     flat = jnp.where(keep, dest * cap + jnp.minimum(slot, cap - 1), e * cap)
     token_of = jnp.arange(t * k, dtype=jnp.int32) // k

@@ -18,6 +18,25 @@ operators (``ctx.finalize``, ``ctx.shrink``, broadcasts) compact internally.
 All column expressions (``with_col``, agg lambdas, dictionary lookups) run on
 garbage rows too, which is safe because garbage values are always drawn from
 previously valid rows and therefore stay in-domain for every LUT.
+
+Hint-threading convention (group_by)
+------------------------------------
+Plans carry two *independent* static hints on ``ctx.group_by``:
+
+  * ``groups_hint=H`` — upper bound on DISTINCT groups.  Shrinks the output
+    capacity to H (before the exchange on the distributed backend, so a
+    gather/shuffle moves O(H) rows, not O(scan capacity)).  Wrong hints set
+    ``ctx.overflow`` and trigger re-execution; groups are never silently
+    dropped.
+  * ``key_bits=[b0, b1, ...]`` — PROVABLE per-column bit widths
+    (``0 <= key_col[i] < 2^bits[i]``), e.g. from a dictionary domain
+    (``ctx.dict_bits(col)``) or an arithmetic bound stated in a comment at
+    the call site.  When ``sum(bits) <= 13`` the engine runs the sortless
+    direct-addressing aggregation (dense gid = packed key, one-hot MXU
+    reduce via ``kernels/segsum``) on both the partial and the
+    post-exchange merge; larger or absent widths fall back to the
+    single-sort path.  A lying width also sets ``ctx.overflow`` rather than
+    corrupting results.  The NumPy reference backend ignores both hints.
 """
 from .q01_08 import q1, q2, q3, q4, q5, q6, q7, q8
 from .q09_15 import q9, q10, q11, q12, q13, q14, q15

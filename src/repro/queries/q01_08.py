@@ -32,7 +32,8 @@ def q1(ctx):
         ("avg_price", "avg", "l_extendedprice"),
         ("avg_disc", "avg", "l_discount"),
         ("count_order", "count", None),
-    ], exchange="gather", final=True, groups_hint=8)
+    ], exchange="gather", final=True, groups_hint=8,
+        key_bits=[ctx.dict_bits("l_returnflag"), ctx.dict_bits("l_linestatus")])
     return ctx.finalize(g, sort_keys=[("l_returnflag", True), ("l_linestatus", True)],
                         replicated=True)
 
@@ -97,7 +98,8 @@ def q4(ctx):
     lc = ctx.filter(l, l["l_commitdate"] < l["l_receiptdate"])
     o = ctx.semi(o, lc, "o_orderkey", "l_orderkey")
     g = ctx.group_by(o, ["o_orderpriority"], [("order_count", "count", None)],
-                     exchange="gather", final=True, groups_hint=8)
+                     exchange="gather", final=True, groups_hint=8,
+                     key_bits=[ctx.dict_bits("o_orderpriority")])
     return ctx.finalize(g, sort_keys=[("o_orderpriority", True)], replicated=True)
 
 
@@ -120,7 +122,8 @@ def q5(ctx):
     lj = ctx.join(lj, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
     lj = ctx.filter(lj, lj["c_nationkey"] == lj["s_nationkey"])
     g = ctx.group_by(lj, ["s_nationkey"], [("revenue", "sum", _disc)],
-                     exchange="gather", final=True, groups_hint=32)
+                     exchange="gather", final=True, groups_hint=32,
+                     key_bits=[ctx.dict_bits("n_name")])   # nationkey < 25
     # n_name dictionary code == nationkey by construction
     return ctx.finalize(g, sort_keys=[("revenue", False)], replicated=True)
 
@@ -165,7 +168,8 @@ def q7(ctx):
         ("cust_nation", "max", "c_nationkey"),
         ("l_year", "max", "l_year"),
         ("revenue", "sum", _disc),
-    ], exchange="gather", final=True, groups_hint=16)
+    ], exchange="gather", final=True, groups_hint=16,
+        key_bits=[13])   # grp < 25*25*8 = 5000 < 2^13
     return ctx.finalize(ctx.select(g, "supp_nation", "cust_nation", "l_year", "revenue"),
                         sort_keys=[("supp_nation", True), ("cust_nation", True),
                                    ("l_year", True)], replicated=True)
@@ -197,7 +201,8 @@ def q8(ctx):
         ("total", "sum", _disc),
         ("brazil", "sum", lambda t: ctx.xp.where(t["s_nationkey"] == br,
                                                  _disc(t), 0.0)),
-    ], exchange="gather", final=True, groups_hint=16)
+    ], exchange="gather", final=True, groups_hint=16,
+        key_bits=[11])   # o_year from the 1970-2005 LUT, < 2^11
     g = ctx.with_col(g, mkt_share=lambda t: t["brazil"] / t["total"])
     return ctx.finalize(ctx.select(g, "o_year", "mkt_share"),
                         sort_keys=[("o_year", True)], replicated=True)

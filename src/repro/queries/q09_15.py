@@ -29,7 +29,8 @@ def q9(ctx):
         ("o_year", "max", "o_year"),
         ("sum_profit", "sum", lambda t: _disc(t) -
          t["ps_supplycost"] * t["l_quantity"]),
-    ], exchange="gather", final=True, groups_hint=512)
+    ], exchange="gather", final=True, groups_hint=512,
+        key_bits=[9])   # grp = nationkey*16 + (year-1992) < 25*16 = 400
     g = ctx.with_col(g, n_rank=lambda t: ctx.alpha_rank(t, "n_name"))
     return ctx.finalize(ctx.select(g, "n_name", "n_rank", "o_year", "sum_profit"),
                         sort_keys=[("n_rank", True), ("o_year", False)],
@@ -89,7 +90,8 @@ def q12(ctx):
          lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 1, 0)),
         ("low_line_count", "sum",
          lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 0, 1)),
-    ], exchange="gather", final=True, groups_hint=16)
+    ], exchange="gather", final=True, groups_hint=16,
+        key_bits=[ctx.dict_bits("l_shipmode")])
     g = ctx.with_col(g, m_rank=lambda t: ctx.alpha_rank(t, "l_shipmode"))
     return ctx.finalize(g, sort_keys=[("m_rank", True)], replicated=True)
 

@@ -183,5 +183,6 @@ def q22(ctx):
     cs2 = ctx.anti(cs2, go, "c_custkey", "o_custkey")                    # custkey-local
     g = ctx.group_by(cs2, ["c_phone_cc"], [
         ("numcust", "count", None), ("totacctbal", "sum", "c_acctbal")],
-        exchange="gather", final=True, groups_hint=40)
+        exchange="gather", final=True, groups_hint=40,
+        key_bits=[6])   # c_phone_cc = nationkey + 10 < 35 < 2^6
     return ctx.finalize(g, sort_keys=[("c_phone_cc", True)], replicated=True)
