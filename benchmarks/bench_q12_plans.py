@@ -14,7 +14,6 @@ from repro.core import backend as B
 from repro.core.table import days
 from repro.data import tpch
 from repro.queries import QUERIES
-from repro.queries.q01_08 import _in
 from repro.core.compat import make_mesh
 
 from .common import emit, time_fn
@@ -34,13 +33,12 @@ def _filtered_lineitem(ctx):
 
 
 def _finish(ctx, j):
-    hi = [ctx.db.code("o_orderpriority", "1-URGENT"),
-          ctx.db.code("o_orderpriority", "2-HIGH")]
+    hi = ["1-URGENT", "2-HIGH"]
     g = ctx.group_by(j, ["l_shipmode"], [
         ("high_line_count", "sum",
-         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 1, 0)),
+         lambda t: ctx.xp.where(ctx.isin(t, "o_orderpriority", hi), 1, 0)),
         ("low_line_count", "sum",
-         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 0, 1)),
+         lambda t: ctx.xp.where(ctx.isin(t, "o_orderpriority", hi), 0, 1)),
     ], exchange="gather", final=True)
     g = ctx.with_col(g, m_rank=lambda t: ctx.alpha_rank(t, "l_shipmode"))
     return ctx.finalize(g, sort_keys=[("m_rank", True)], replicated=True)

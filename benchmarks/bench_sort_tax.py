@@ -14,7 +14,11 @@ both phases against regression.  Run:
 Writes ``BENCH_sort_tax.json`` at the repo root.  ``--check`` exits non-zero
 unless every query's HLO sort count is within its ABSOLUTE budget
 (``MAX_SORT_OPS`` — the phase-2 gate) and, where a true seed measurement
-exists, down >= 40% vs the seed (the phase-1 gate).
+exists, down >= 40% vs the seed (the phase-1 gate).  Phase 3 (the logical
+planner): queries compile through the builder+planner path with inference
+pinned on, and the report additionally records the planner's own cost per
+query (``plan_build_ms`` / ``plan_infer_ms`` — DAG construction and bound
+propagation, both host-side and cached per database in production use).
 """
 from __future__ import annotations
 
@@ -27,11 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as B
+from repro.core import planner as PL
 from repro.core import relational as rel
 from repro.core.table import Table
 from repro.data import tpch
 from repro.distributed.hlo_analysis import op_histogram
-from repro.queries import QUERIES
+from repro.queries import PLANS, QUERIES
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_sort_tax.json")
@@ -58,11 +63,32 @@ MIN_SORT_DROP = 0.40
 MAX_SORT_OPS = {"q1": 1, "q3": 4, "q6": 0, "q9": 5, "q12": 2}
 
 
+def _plan_times(db, qid: int, iters: int = 9) -> tuple[float, float]:
+    """(plan build ms, planner inference ms): the cost of the logical layer.
+
+    Build = constructing the plan DAG from the builder; inference = bound
+    propagation + hint derivation + placement validation (host-side, cached
+    per database in production use — measured uncached here).
+    """
+    build_ts, infer_ts = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        root = PLANS[qid]()
+        build_ts.append(time.perf_counter() - t0)
+        PL.invalidate_stats(db)                       # measure cold inference
+        t0 = time.perf_counter()
+        PL.analyze(root, db)
+        infer_ts.append(time.perf_counter() - t0)
+    return min(build_ts) * 1e3, min(infer_ts) * 1e3
+
+
 def _compile_and_time(db, tables, qid: int, join_method: str,
                       iters: int = 9):
     def run(tables):
         ctx = B.LocalContext(db, tables, join_method=join_method)
-        out = QUERIES[qid](ctx)
+        # inference pinned ON: the gate measures the compiled planner path
+        # regardless of the REPRO_PLANNER leg running the bench
+        out = QUERIES[qid].run(ctx, infer=True)
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
@@ -99,6 +125,7 @@ def main():
     for qid in BENCH_QUERIES:
         nsort, wall_ms = _compile_and_time(db, tables, qid, "sorted")
         _, wall_hash = _compile_and_time(db, tables, qid, "hash")
+        build_ms, infer_ms = _plan_times(db, qid)
         seed = SEED_BASELINE[f"q{qid}"]
         budget = MAX_SORT_OPS[f"q{qid}"]
         drop = 1.0 - nsort / seed["sort_ops"]
@@ -112,6 +139,8 @@ def main():
             "wall_ms_hash_join": round(wall_hash, 2),
             "seed_wall_ms": seed["wall_ms"],
             "speedup_vs_seed": round(speedup, 2),
+            "plan_build_ms": round(build_ms, 3),
+            "plan_infer_ms": round(infer_ms, 3),
         }
         ok &= nsort <= budget
         if not seed.get("phase1"):      # the 40% rule needs a true seed
@@ -119,7 +148,8 @@ def main():
         print(f"q{qid}: sorts {seed['sort_ops']} -> {nsort} "
               f"({drop:.0%} drop, budget {budget}), wall {seed['wall_ms']:.1f}"
               f" -> {wall_ms:.1f} ms ({speedup:.2f}x)"
-              f"  [hash-join {wall_hash:.1f} ms]",
+              f"  [hash-join {wall_hash:.1f} ms,"
+              f" plan build {build_ms:.2f} ms + infer {infer_ms:.2f} ms]",
               flush=True)
 
     report["min_sort_drop"] = MIN_SORT_DROP

@@ -116,6 +116,14 @@ class _BaseContext:
         self.capacity_factor = capacity_factor
         self._join_cache: dict[tuple, tuple] = {}
 
+    def bucket_cap(self) -> int:
+        """Per-bucket capacity of the Pallas hash-join table, scaled by the
+        runner's capacity factor: the default factor (2.0) gives the historic
+        cap of 16, and the fault runner's escalation (factor *= 2 on
+        overflow) genuinely enlarges the buckets on re-execution instead of
+        retrying the same doomed layout (ROADMAP open item)."""
+        return max(2, int(round(8 * self.capacity_factor)))
+
     # -- dictionary-encoded string predicates (TQP-style) ------------------
     def str_lookup(self, col: str, pred: Callable[[np.ndarray], np.ndarray]):
         """Host-evaluated predicate over dictionary -> per-row boolean."""
@@ -341,7 +349,8 @@ class LocalContext(_BaseContext):
             on_desc = tuple(build_on)
         else:  # raw key arrays etc. — build fresh rather than key by id()
             idx = rel.build_index(build, self._key(build, build_on),
-                                  method=self.join_method)
+                                  method=self.join_method,
+                                  bucket_cap=self.bucket_cap())
             self.overflow = self.overflow | idx.overflow
             return idx
         ck = (id(build), on_desc)
@@ -349,7 +358,8 @@ class LocalContext(_BaseContext):
         if hit is not None:
             return hit[1]
         idx = rel.build_index(build, self._key(build, build_on),
-                              method=self.join_method)
+                              method=self.join_method,
+                              bucket_cap=self.bucket_cap())
         self.overflow = self.overflow | idx.overflow
         self._join_cache[ck] = (build, idx)  # keep build alive: id() stability
         return idx
@@ -593,13 +603,13 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
 
 def run_local(query_fn, db: Database, jit: bool = True,
               join_method: str = "sorted", use_kernel: bool | None = None,
-              ) -> tuple[dict, PlanStats]:
+              capacity_factor: float = 2.0) -> tuple[dict, PlanStats]:
     tables = _np_db_to_tables(db)
     holder = {}
 
     def run(tables):
-        ctx = LocalContext(db, tables, join_method=join_method,
-                           use_kernel=use_kernel)
+        ctx = LocalContext(db, tables, capacity_factor=capacity_factor,
+                           join_method=join_method, use_kernel=use_kernel)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):

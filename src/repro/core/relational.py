@@ -36,6 +36,12 @@ Sort-count budget per operator (HLO ``sort`` ops; enforced by
   sort_by                        1 (any number of keys)
   shuffle (exchange)             0 (radix-hist counting rank), output masked
   compact / ensure_compact       1, boundaries only
+
+``key_bits`` is no longer hand-threaded by query code: ``core/planner.py``
+derives it (and ``groups_hint``) by bound propagation over the logical plan
+(``core/plan.py``) and passes it here — the physical contract of this module
+is unchanged, only the *source* of the widths moved from comments at call
+sites into a compiler pass.
 """
 from __future__ import annotations
 

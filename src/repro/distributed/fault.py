@@ -2,8 +2,11 @@
 
 Queries: the paper's model (§2.4) — re-execution at interactive speed.  Our
 static-shape adaptation adds one structured failure mode: capacity overflow
-(a shuffle bucket or shrink exceeded its planned size).  The runner escalates
-the capacity factor and re-executes; unstructured failures (preempted node →
+(a shuffle bucket, a shrink, or a hash-join bucket table exceeded its planned
+size — all raise ``ctx.overflow``, never assert locally).  The runner
+escalates the capacity factor and re-executes; the factor also scales the
+hash-join per-bucket capacity (``_BaseContext.bucket_cap``), so escalation
+genuinely enlarges the buckets.  Unstructured failures (preempted node →
 surfaced as an exception in a real deployment) get bounded retries.
 
 Skew: the monitor computes the paper's §3.5 statistic (per-node send/recv max
@@ -40,7 +43,8 @@ class QueryRunner:
 
     def __init__(self, db, mesh, axis: str = "data",
                  capacity_factor: float = 2.0, max_attempts: int = 4,
-                 escalation: float = 2.0, packed_exchange: bool = True):
+                 escalation: float = 2.0, packed_exchange: bool = True,
+                 join_method: str = "sorted"):
         self.db = db
         self.mesh = mesh
         self.axis = axis
@@ -48,16 +52,19 @@ class QueryRunner:
         self.max_attempts = max_attempts
         self.escalation = escalation
         self.packed = packed_exchange
+        self.join_method = join_method
 
     def run(self, query_fn) -> RunResult:
         factor = self.capacity_factor
         last_exc = None
+        fn = query_fn
         for attempt in range(1, self.max_attempts + 1):
             t0 = time.perf_counter()
             try:
                 result, stats, overflow = B.run_distributed(
-                    query_fn, self.db, self.mesh, self.axis,
-                    capacity_factor=factor, packed_exchange=self.packed)
+                    fn, self.db, self.mesh, self.axis,
+                    capacity_factor=factor, packed_exchange=self.packed,
+                    join_method=self.join_method)
             except Exception as exc:   # node failure -> re-execute
                 last_exc = exc
                 continue
@@ -65,6 +72,13 @@ class QueryRunner:
             if not overflow:
                 return RunResult(result, stats, attempt, factor, wall)
             factor *= self.escalation   # structured failure: bigger buffers
+            if attempt >= 2 and hasattr(query_fn, "with_inference"):
+                # capacity escalation cannot fix a groups_hint that undercounts
+                # the true distinct groups (a plan-author claim like Q13's, or
+                # hints analyzed against stand-in metadata): after one failed
+                # escalation, recompile the plan with no hints at all — the
+                # conservative program has no hint-induced overflow left
+                fn = query_fn.with_inference(False)
         if last_exc is not None:
             raise last_exc
         raise RuntimeError(

@@ -152,8 +152,12 @@ def hash_join_probe_auto(probe_keys, build_keys, build_vals, cap: int = 8,
                          max_tries: int = 4, **kw):
     """Host-level capacity escalation: double bucket capacity on overflow.
 
-    This is the same re-execution discipline the fault-tolerant query runner
-    applies to shuffle overflow (paper §2.4: fault tolerance by re-execution)."""
+    Standalone-kernel convenience only.  The relational engine does NOT use
+    this local retry loop: ``relational.build_index`` surfaces the overflow
+    flag, the backends fold it into ``ctx.overflow``, and the fault runner's
+    capacity-factor escalation (which also scales the per-bucket capacity via
+    ``_BaseContext.bucket_cap``) re-executes the whole query — the same
+    re-execution discipline as shuffle overflow (paper §2.4)."""
     for _ in range(max_tries):
         out, ov = hash_join_probe(probe_keys, build_keys, build_vals,
                                   cap=cap, **kw)

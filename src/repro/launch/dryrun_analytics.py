@@ -42,6 +42,33 @@ SF1000_ROWS = {
     "orders": 1_500_000_000, "lineitem": 6_000_000_000,
 }
 
+# Scale-DEPENDENT key columns: their domain at SF=1000 is the PK row count of
+# the owning table (our generator draws dense 1..n keys).  The tiny metadata
+# database's min/max for these would let the planner infer hints valid only
+# at the tiny scale (e.g. a 256-slot direct group-by over 150M custkeys), so
+# the stand-in compile overwrites their stats before analysis.  Date, dict,
+# and quantity columns keep the tiny db's stats — those domains are
+# scale-independent, exactly like the hand hints they replaced.
+_SCALE_KEYS = {
+    "o_orderkey": "orders", "l_orderkey": "orders",
+    "c_custkey": "customer", "o_custkey": "customer",
+    "p_partkey": "part", "l_partkey": "part", "ps_partkey": "part",
+    "s_suppkey": "supplier", "l_suppkey": "supplier",
+    "ps_suppkey": "supplier",
+}
+
+
+def _sf1000_stats(db):
+    """Scoped override of the planner's column stats with the SF=1000 key
+    domains (planner.stats_override restores the actual-scale stats on exit,
+    so later real executions of the same tiny database re-infer correctly)."""
+    from repro.core import planner as PL
+    stats = dict(PL.column_stats(db))
+    for cname, table in _SCALE_KEYS.items():
+        hi = SF1000_ROWS[table]
+        stats[cname] = PL.ColStats(1, hi, hi)
+    return PL.stats_override(db, stats)
+
 
 def build_specs(db, n_dev: int):
     """ShapeDtypeStruct stand-ins shaped like partition_database's output."""
@@ -86,7 +113,9 @@ def dryrun_query(qid: int, db, mesh, capacity_factor=1.02,
         return (Table(dict(out.columns), out.count.reshape(1)),
                 ctx.overflow.reshape(1))
 
-    with mesh:
+    # hints traced during lowering must model SF=1000 key domains, not the
+    # tiny metadata db's; scoped so later real runs of db re-infer correctly
+    with mesh, _sf1000_stats(db):
         fn = jax.jit(compat.shard_map(
             spmd, mesh=mesh, in_specs=P(axis), out_specs=P(axis)))
         t0 = time.time()

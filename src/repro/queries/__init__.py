@@ -1,50 +1,76 @@
-"""The 22 TPC-H queries as manually-optimized tensor programs (paper §4.4).
+"""The 22 TPC-H queries as lazy logical plans (paper §4.4, now compiled).
 
-Each query is a single function against the backend Context API; exchange
-placement (shuffle / broadcast / final gather) is explicit and follows the
-paper's plans under its §4.3 input partitioning:
+Each query module function (``q1()`` .. ``q22()``) BUILDS a logical plan —
+a plain-data DAG of ``repro.core.plan`` nodes with column-expression trees —
+and ``repro.core.planner`` compiles it against the physical ``Context`` API.
+``QUERIES[qid]`` is the compiled form: a callable ``query_fn(ctx)`` exactly
+like the legacy eager plans, runnable unchanged on ``RefContext`` /
+``LocalContext`` / ``DistContext``.  Exchange placement (``.shuffle()`` /
+``.broadcast()`` / ``exchange=`` on group_by) remains explicit plan
+structure, following the paper's plans under its §4.3 input partitioning:
 
   lineitem@l_orderkey  orders@o_orderkey  partsupp@ps_partkey  part@p_partkey
   supplier@s_suppkey   customer@c_custkey nation,region replicated
 
-Exchange counts per plan are asserted against paper Table 4 in
-tests/test_plan_stats.py (Q11 deviates: our partitioning makes the group-by
-local where the paper shuffles — noted in DESIGN.md).
+Exchange counts per plan are derived statically from the IR and asserted
+against paper Table 4 in tests/test_plan_stats.py — alongside the runtime
+counts, which they must equal on every backend (Q11 deviates from the paper:
+our partitioning makes the group-by local where the paper shuffles).
 
-Deferred compaction: intermediate tables a plan sees after ``ctx.filter`` /
-``ctx.join`` / ``ctx.semi`` / ``ctx.anti`` may be *masked* (valid-row mask,
-not front-compacted) — plans must not index rows positionally; row-positional
-operators (``ctx.finalize``, ``ctx.shrink``, broadcasts) compact internally.
-All column expressions (``with_col``, agg lambdas, dictionary lookups) run on
-garbage rows too, which is safe because garbage values are always drawn from
-previously valid rows and therefore stay in-domain for every LUT.
+Planner contract (replaces the hand hint-threading convention)
+--------------------------------------------------------------
+The physical engine still takes two static hints on ``group_by`` —
+``key_bits`` (provable per-column key widths; sum <= 13 unlocks the sortless
+direct-addressing aggregation) and ``groups_hint`` (distinct-group bound that
+shrinks partials before an exchange).  Plans NO LONGER state them:
 
-Hint-threading convention (group_by)
-------------------------------------
-Plans carry two *independent* static hints on ``ctx.group_by``:
+  * ``key_bits`` is ALWAYS inferred — by bound propagation from per-column
+    min/max statistics (dictionary domains, generated key ranges) through
+    filters and expression arithmetic.  Query code contains zero hand-written
+    key widths, and inference runs against the database that executes, so an
+    inferred width cannot lie in normal execution.  Stand-in compiles whose
+    tables are NOT the analyzed database (the SF=1000 dry-run) must inject
+    matching statistics (``launch/dryrun_analytics._sf1000_stats``) or
+    compile with inference off.
+  * ``groups_hint`` is inferred from key-domain cardinality products where
+    provable; a plan may still pass ``groups_hint=`` for bounds the planner
+    cannot prove (data-dependent group counts — Q13's orders-per-customer
+    histogram is the one remaining case).  When both exist the tighter bound
+    wins.  An author claim that undercounts raises ``ctx.overflow``; capacity
+    escalation alone cannot fix that, so the fault runner recompiles with
+    inference off after a failed escalation (``distributed/fault.py``) —
+    groups are never silently dropped either way.
+  * The sortless-vs-sorted aggregation choice follows from the inferred
+    widths per database: the same plan uses direct addressing at scale
+    factors where the key domain proves small and degrades to the single-sort
+    path where it does not.
 
-  * ``groups_hint=H`` — upper bound on DISTINCT groups.  Shrinks the output
-    capacity to H (before the exchange on the distributed backend, so a
-    gather/shuffle moves O(H) rows, not O(scan capacity)).  Wrong hints set
-    ``ctx.overflow`` and trigger re-execution; groups are never silently
-    dropped.
-  * ``key_bits=[b0, b1, ...]`` — PROVABLE per-column bit widths
-    (``0 <= key_col[i] < 2^bits[i]``), e.g. from a dictionary domain
-    (``ctx.dict_bits(col)``) or an arithmetic bound stated in a comment at
-    the call site.  When ``sum(bits) <= 13`` the engine runs the sortless
-    direct-addressing aggregation (dense gid = packed key, one-hot MXU
-    reduce via ``kernels/segsum``) on both the partial and the
-    post-exchange merge; larger or absent widths fall back to the
-    single-sort path.  A lying width also sets ``ctx.overflow`` rather than
-    corrupting results.  The NumPy reference backend ignores both hints.
+``REPRO_PLANNER=0`` disables all hints (the conservative leg CI runs to pin
+that hinted and unhinted compilation agree — byte-identical per aggregation
+engine, rtol=1e-9 across engines on the forced-kernel leg; see
+tests/test_planner.py); ``QUERIES[qid].with_inference(True/False)`` pins the
+mode per call site.
+
+Deferred compaction: intermediate tables a plan sees after filters and joins
+may be *masked* (valid-row mask, not front-compacted) — plans must not index
+rows positionally; row-positional operators (``finalize``, ``shrink``,
+broadcasts) compact internally.  Column expressions run on garbage rows too,
+which is safe because garbage values are always drawn from previously valid
+rows and therefore stay in-domain for every LUT.
 """
-from .q01_08 import q1, q2, q3, q4, q5, q6, q7, q8
-from .q09_15 import q9, q10, q11, q12, q13, q14, q15
-from .q16_22 import q16, q17, q18, q19, q20, q21, q22
+from repro.core.planner import compile_query
 
-QUERIES = {i: fn for i, fn in enumerate(
-    [q1, q2, q3, q4, q5, q6, q7, q8, q9, q10, q11, q12, q13, q14, q15,
-     q16, q17, q18, q19, q20, q21, q22], start=1)}
+from . import q01_08, q09_15, q16_22
+
+# plan builders: call to get a FRESH logical-plan root (benchmarks time this)
+PLANS = {}
+for _mod in (q01_08, q09_15, q16_22):
+    for _name in _mod.__all__:
+        PLANS[int(_name[1:])] = getattr(_mod, _name)
+
+# compiled queries: `query_fn(ctx)` callables, plan built once and shared
+QUERIES = {qid: compile_query(fn, name=f"q{qid}")
+           for qid, fn in sorted(PLANS.items())}
 
 # Paper Table 4 (legible cells) — (shuffles, broadcasts); final gathers and
 # allreduces are excluded, as in the paper.
@@ -56,4 +82,4 @@ PAPER_TABLE4 = {
     21: (0, None), 22: (1, None),
 }
 
-__all__ = ["QUERIES", "PAPER_TABLE4"]
+__all__ = ["QUERIES", "PLANS", "PAPER_TABLE4"]

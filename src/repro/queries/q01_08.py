@@ -1,29 +1,24 @@
-"""TPC-H Q1-Q8 tensor plans."""
+"""TPC-H Q1-Q8 as lazy logical plans (builder API; see queries/__init__.py).
+
+Each ``qN()`` returns the ROOT NODE of a plan DAG; the planner compiles it
+against a backend Context and infers every static hint (``key_bits``,
+``groups_hint``) the legacy eager plans carried by hand.
+"""
+from repro.core.plan import (alpha_rank, col, ends_with, isin, result, scan,
+                             scode, where, year)
 from repro.core.table import days
 
 __all__ = ["q1", "q2", "q3", "q4", "q5", "q6", "q7", "q8"]
 
-
-def _disc(t):
-    return t["l_extendedprice"] * (1 - t["l_discount"])
-
-
-def _charge(t):
-    return t["l_extendedprice"] * (1 - t["l_discount"]) * (1 + t["l_tax"])
+# reusable column expressions (plain data — safe to share across plans)
+_disc = col("l_extendedprice") * (1 - col("l_discount"))
+_charge = _disc * (1 + col("l_tax"))
 
 
-def _in(x, vals):
-    m = x == vals[0]
-    for v in vals[1:]:
-        m = m | (x == v)
-    return m
-
-
-def q1(ctx):
+def q1():
     """Pricing summary report.  No exchange: local agg + final gather-merge."""
-    l = ctx.scan("lineitem")
-    l = ctx.filter(l, l["l_shipdate"] <= days("1998-09-02"))
-    g = ctx.group_by(l, ["l_returnflag", "l_linestatus"], [
+    l = scan("lineitem").filter(col("l_shipdate") <= days("1998-09-02"))
+    g = l.group_by(["l_returnflag", "l_linestatus"], [
         ("sum_qty", "sum", "l_quantity"),
         ("sum_base_price", "sum", "l_extendedprice"),
         ("sum_disc_price", "sum", _disc),
@@ -32,177 +27,154 @@ def q1(ctx):
         ("avg_price", "avg", "l_extendedprice"),
         ("avg_disc", "avg", "l_discount"),
         ("count_order", "count", None),
-    ], exchange="gather", final=True, groups_hint=8,
-        key_bits=[ctx.dict_bits("l_returnflag"), ctx.dict_bits("l_linestatus")])
-    return ctx.finalize(g, sort_keys=[("l_returnflag", True), ("l_linestatus", True)],
-                        replicated=True)
+    ], exchange="gather", final=True)
+    return g.finalize(sort_keys=[("l_returnflag", True),
+                                 ("l_linestatus", True)], replicated=True)
 
 
-def _europe_suppliers(ctx):
-    nat = ctx.scan("nation")
-    reg = ctx.scan("region")
-    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
-    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "EUROPE"))
-    s = ctx.join(ctx.scan("supplier"), n, "s_nationkey", "n_nationkey", ["n_name"])
-    return s
+def _europe_suppliers():
+    n = scan("nation").join(scan("region"), "n_regionkey", "r_regionkey",
+                            ["r_name"])
+    n = n.filter(col("r_name") == scode("r_name", "EUROPE"))
+    return scan("supplier").join(n, "s_nationkey", "n_nationkey", ["n_name"])
 
 
-def q2(ctx):
+def q2():
     """Minimum-cost supplier.  Broadcast the (small) filtered EU suppliers."""
-    part = ctx.scan("part")
-    ps = ctx.scan("partsupp")
-    p = ctx.filter(part, (part["p_size"] == 15) & ctx.ends_with(part, "p_type", "BRASS"))
-    s = _europe_suppliers(ctx)
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_acctbal", "n_name"))
-    j = ctx.join(ps, p, "ps_partkey", "p_partkey", ["p_mfgr"])          # co-partitioned
-    j = ctx.join(j, sb, "ps_suppkey", "s_suppkey", ["s_acctbal", "n_name"])
-    mn = ctx.group_by(j, ["ps_partkey"], [("min_cost", "min", "ps_supplycost")],
-                      exchange="local")                                  # partkey-local
-    j = ctx.join(j, ctx.rename(mn, {"ps_partkey": "mk"}),
-                 "ps_partkey", "mk", ["min_cost"])
-    j = ctx.filter(j, j["ps_supplycost"] == j["min_cost"])
-    j = ctx.with_col(j, n_rank=lambda t: ctx.alpha_rank(t, "n_name"))
-    out = ctx.select(j, "s_acctbal", "n_name", "n_rank", "ps_suppkey",
-                     "ps_partkey", "p_mfgr")
-    return ctx.finalize(out, sort_keys=[("s_acctbal", False), ("n_rank", True),
-                                        ("ps_suppkey", True), ("ps_partkey", True)],
+    p = scan("part").filter((col("p_size") == 15) &
+                            ends_with("p_type", "BRASS"))
+    sb = _europe_suppliers().select("s_suppkey", "s_acctbal",
+                                    "n_name").broadcast()
+    j = scan("partsupp").join(p, "ps_partkey", "p_partkey", ["p_mfgr"])  # co-partitioned
+    j = j.join(sb, "ps_suppkey", "s_suppkey", ["s_acctbal", "n_name"])
+    mn = j.group_by(["ps_partkey"], [("min_cost", "min", "ps_supplycost")],
+                    exchange="local")                                    # partkey-local
+    j = j.join(mn.rename({"ps_partkey": "mk"}), "ps_partkey", "mk",
+               ["min_cost"])
+    j = j.filter(col("ps_supplycost") == col("min_cost"))
+    j = j.with_col(n_rank=alpha_rank("n_name"))
+    out = j.select("s_acctbal", "n_name", "n_rank", "ps_suppkey",
+                   "ps_partkey", "p_mfgr")
+    return out.finalize(sort_keys=[("s_acctbal", False), ("n_rank", True),
+                                   ("ps_suppkey", True), ("ps_partkey", True)],
                         limit=100)
 
 
-def q3(ctx):
+def q3():
     """Shipping priority.  Broadcast BUILDING-segment customer keys."""
-    c = ctx.scan("customer")
-    o = ctx.scan("orders")
-    l = ctx.scan("lineitem")
-    c = ctx.filter(c, ctx.eq(c, "c_mktsegment", "BUILDING"))
-    cb = ctx.broadcast(ctx.select(c, "c_custkey"))
-    o = ctx.filter(o, o["o_orderdate"] < days("1995-03-15"))
-    o = ctx.semi(o, cb, "o_custkey", "c_custkey")
-    l = ctx.filter(l, l["l_shipdate"] > days("1995-03-15"))
-    j = ctx.join(l, o, "l_orderkey", "o_orderkey", ["o_orderdate", "o_shippriority"])
-    g = ctx.group_by(j, ["l_orderkey"], [
+    c = scan("customer").filter(col("c_mktsegment") ==
+                                scode("c_mktsegment", "BUILDING"))
+    cb = c.select("c_custkey").broadcast()
+    o = scan("orders").filter(col("o_orderdate") < days("1995-03-15"))
+    o = o.semi(cb, "o_custkey", "c_custkey")
+    l = scan("lineitem").filter(col("l_shipdate") > days("1995-03-15"))
+    j = l.join(o, "l_orderkey", "o_orderkey",
+               ["o_orderdate", "o_shippriority"])
+    g = j.group_by(["l_orderkey"], [
         ("revenue", "sum", _disc),
         ("o_orderdate", "max", "o_orderdate"),
         ("o_shippriority", "max", "o_shippriority"),
     ], exchange="local")                                                 # orderkey-local
-    return ctx.finalize(g, sort_keys=[("revenue", False), ("o_orderdate", True)],
-                        limit=10)
+    return g.finalize(sort_keys=[("revenue", False), ("o_orderdate", True)],
+                      limit=10)
 
 
-def q4(ctx):
+def q4():
     """Order priority checking.  Fully co-partitioned: no exchange."""
-    o = ctx.scan("orders")
-    l = ctx.scan("lineitem")
-    o = ctx.filter(o, (o["o_orderdate"] >= days("1993-07-01")) &
-                   (o["o_orderdate"] < days("1993-10-01")))
-    lc = ctx.filter(l, l["l_commitdate"] < l["l_receiptdate"])
-    o = ctx.semi(o, lc, "o_orderkey", "l_orderkey")
-    g = ctx.group_by(o, ["o_orderpriority"], [("order_count", "count", None)],
-                     exchange="gather", final=True, groups_hint=8,
-                     key_bits=[ctx.dict_bits("o_orderpriority")])
-    return ctx.finalize(g, sort_keys=[("o_orderpriority", True)], replicated=True)
+    o = scan("orders").filter((col("o_orderdate") >= days("1993-07-01")) &
+                              (col("o_orderdate") < days("1993-10-01")))
+    lc = scan("lineitem").filter(col("l_commitdate") < col("l_receiptdate"))
+    o = o.semi(lc, "o_orderkey", "l_orderkey")
+    g = o.group_by(["o_orderpriority"], [("order_count", "count", None)],
+                   exchange="gather", final=True)
+    return g.finalize(sort_keys=[("o_orderpriority", True)], replicated=True)
 
 
-def q5(ctx):
+def q5():
     """Local supplier volume.  Two dimension broadcasts (customer, supplier)."""
-    nat = ctx.scan("nation")
-    reg = ctx.scan("region")
-    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
-    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "ASIA"))
-    c = ctx.semi(ctx.scan("customer"), n, "c_nationkey", "n_nationkey")
-    cb = ctx.broadcast(ctx.select(c, "c_custkey", "c_nationkey"))
-    o = ctx.scan("orders")
-    o = ctx.filter(o, (o["o_orderdate"] >= days("1994-01-01")) &
-                   (o["o_orderdate"] < days("1995-01-01")))
-    oj = ctx.join(o, cb, "o_custkey", "c_custkey", ["c_nationkey"])
-    lj = ctx.join(ctx.scan("lineitem"), oj, "l_orderkey", "o_orderkey",
-                  ["c_nationkey"])
-    s = ctx.semi(ctx.scan("supplier"), n, "s_nationkey", "n_nationkey")
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))
-    lj = ctx.join(lj, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
-    lj = ctx.filter(lj, lj["c_nationkey"] == lj["s_nationkey"])
-    g = ctx.group_by(lj, ["s_nationkey"], [("revenue", "sum", _disc)],
-                     exchange="gather", final=True, groups_hint=32,
-                     key_bits=[ctx.dict_bits("n_name")])   # nationkey < 25
-    # n_name dictionary code == nationkey by construction
-    return ctx.finalize(g, sort_keys=[("revenue", False)], replicated=True)
+    n = scan("nation").join(scan("region"), "n_regionkey", "r_regionkey",
+                            ["r_name"])
+    n = n.filter(col("r_name") == scode("r_name", "ASIA"))
+    c = scan("customer").semi(n, "c_nationkey", "n_nationkey")
+    cb = c.select("c_custkey", "c_nationkey").broadcast()
+    o = scan("orders").filter((col("o_orderdate") >= days("1994-01-01")) &
+                              (col("o_orderdate") < days("1995-01-01")))
+    oj = o.join(cb, "o_custkey", "c_custkey", ["c_nationkey"])
+    lj = scan("lineitem").join(oj, "l_orderkey", "o_orderkey",
+                               ["c_nationkey"])
+    s = scan("supplier").semi(n, "s_nationkey", "n_nationkey")
+    sb = s.select("s_suppkey", "s_nationkey").broadcast()
+    lj = lj.join(sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    lj = lj.filter(col("c_nationkey") == col("s_nationkey"))
+    g = lj.group_by(["s_nationkey"], [("revenue", "sum", _disc)],
+                    exchange="gather", final=True)
+    return g.finalize(sort_keys=[("revenue", False)], replicated=True)
 
 
-def q6(ctx):
+def q6():
     """Forecasting revenue change: pure scan + allreduce."""
-    l = ctx.scan("lineitem")
-    m = ((l["l_shipdate"] >= days("1994-01-01")) &
-         (l["l_shipdate"] < days("1995-01-01")) &
-         (l["l_discount"] >= 0.05) & (l["l_discount"] <= 0.07) &
-         (l["l_quantity"] < 24))
-    l = ctx.filter(l, m)
-    s = ctx.agg_scalar(l, [("revenue", "sum",
-                            lambda t: t["l_extendedprice"] * t["l_discount"])])
-    return {"revenue": s["revenue"]}
+    l = scan("lineitem").filter(
+        (col("l_shipdate") >= days("1994-01-01")) &
+        (col("l_shipdate") < days("1995-01-01")) &
+        (col("l_discount") >= 0.05) & (col("l_discount") <= 0.07) &
+        (col("l_quantity") < 24))
+    s = l.agg_scalar([("revenue", "sum",
+                       col("l_extendedprice") * col("l_discount"))])
+    return result(revenue=s["revenue"])
 
 
-def q7(ctx):
+def q7():
     """Volume shipping FRANCE<->GERMANY.  Broadcast both filtered dimensions."""
-    fr = ctx.db.code("n_name", "FRANCE")
-    de = ctx.db.code("n_name", "GERMANY")
-    s = ctx.scan("supplier")
-    s = ctx.filter(s, _in(s["s_nationkey"], [fr, de]))
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))
-    c = ctx.scan("customer")
-    c = ctx.filter(c, _in(c["c_nationkey"], [fr, de]))
-    cb = ctx.broadcast(ctx.select(c, "c_custkey", "c_nationkey"))
-    o = ctx.scan("orders")
-    oj = ctx.join(o, cb, "o_custkey", "c_custkey", ["c_nationkey"])
-    l = ctx.scan("lineitem")
-    l = ctx.filter(l, (l["l_shipdate"] >= days("1995-01-01")) &
-                   (l["l_shipdate"] <= days("1996-12-31")))
-    lj = ctx.join(l, oj, "l_orderkey", "o_orderkey", ["c_nationkey"])
-    lj = ctx.join(lj, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
-    lj = ctx.filter(lj, ((lj["s_nationkey"] == fr) & (lj["c_nationkey"] == de)) |
-                    ((lj["s_nationkey"] == de) & (lj["c_nationkey"] == fr)))
-    lj = ctx.with_col(lj, l_year=lambda t: ctx.year(t, "l_shipdate"))
-    lj = ctx.with_col(lj, grp=lambda t: (t["s_nationkey"] * 25 + t["c_nationkey"])
-                      * 8 + (t["l_year"] - 1992))
-    g = ctx.group_by(lj, ["grp"], [
+    fr = scode("n_name", "FRANCE")
+    de = scode("n_name", "GERMANY")
+    s = scan("supplier").filter(isin(col("s_nationkey"), [fr, de]))
+    sb = s.select("s_suppkey", "s_nationkey").broadcast()
+    c = scan("customer").filter(isin(col("c_nationkey"), [fr, de]))
+    cb = c.select("c_custkey", "c_nationkey").broadcast()
+    oj = scan("orders").join(cb, "o_custkey", "c_custkey", ["c_nationkey"])
+    l = scan("lineitem").filter((col("l_shipdate") >= days("1995-01-01")) &
+                                (col("l_shipdate") <= days("1996-12-31")))
+    lj = l.join(oj, "l_orderkey", "o_orderkey", ["c_nationkey"])
+    lj = lj.join(sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    lj = lj.filter(((col("s_nationkey") == fr) & (col("c_nationkey") == de)) |
+                   ((col("s_nationkey") == de) & (col("c_nationkey") == fr)))
+    lj = lj.with_col(l_year=year(col("l_shipdate")))
+    lj = lj.with_col(grp=(col("s_nationkey") * 25 + col("c_nationkey")) * 8 +
+                     (col("l_year") - 1992))
+    g = lj.group_by(["grp"], [
         ("supp_nation", "max", "s_nationkey"),
         ("cust_nation", "max", "c_nationkey"),
         ("l_year", "max", "l_year"),
         ("revenue", "sum", _disc),
-    ], exchange="gather", final=True, groups_hint=16,
-        key_bits=[13])   # grp < 25*25*8 = 5000 < 2^13
-    return ctx.finalize(ctx.select(g, "supp_nation", "cust_nation", "l_year", "revenue"),
-                        sort_keys=[("supp_nation", True), ("cust_nation", True),
-                                   ("l_year", True)], replicated=True)
+    ], exchange="gather", final=True)
+    return g.select("supp_nation", "cust_nation", "l_year", "revenue") \
+        .finalize(sort_keys=[("supp_nation", True), ("cust_nation", True),
+                             ("l_year", True)], replicated=True)
 
 
-def q8(ctx):
+def q8():
     """National market share.  Three broadcasts: part, supplier, customer."""
-    br = ctx.db.code("n_name", "BRAZIL")
-    nat = ctx.scan("nation")
-    reg = ctx.scan("region")
-    n = ctx.join(nat, reg, "n_regionkey", "r_regionkey", ["r_name"])
-    n = ctx.filter(n, n["r_name"] == ctx.db.code("r_name", "AMERICA"))
-    p = ctx.scan("part")
-    p = ctx.filter(p, ctx.eq(p, "p_type", "ECONOMY ANODIZED STEEL"))
-    pb = ctx.broadcast(ctx.select(p, "p_partkey"))                       # b1
-    l = ctx.semi(ctx.scan("lineitem"), pb, "l_partkey", "p_partkey")
-    s = ctx.scan("supplier")
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))        # b2
-    l = ctx.join(l, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
-    c = ctx.semi(ctx.scan("customer"), n, "c_nationkey", "n_nationkey")
-    cb = ctx.broadcast(ctx.select(c, "c_custkey"))                       # b3
-    o = ctx.scan("orders")
-    o = ctx.filter(o, (o["o_orderdate"] >= days("1995-01-01")) &
-                   (o["o_orderdate"] <= days("1996-12-31")))
-    o = ctx.semi(o, cb, "o_custkey", "c_custkey")
-    lj = ctx.join(l, o, "l_orderkey", "o_orderkey", ["o_orderdate"])
-    lj = ctx.with_col(lj, o_year=lambda t: ctx.year(t, "o_orderdate"))
-    g = ctx.group_by(lj, ["o_year"], [
+    br = scode("n_name", "BRAZIL")
+    n = scan("nation").join(scan("region"), "n_regionkey", "r_regionkey",
+                            ["r_name"])
+    n = n.filter(col("r_name") == scode("r_name", "AMERICA"))
+    p = scan("part").filter(col("p_type") ==
+                            scode("p_type", "ECONOMY ANODIZED STEEL"))
+    pb = p.select("p_partkey").broadcast()                               # b1
+    l = scan("lineitem").semi(pb, "l_partkey", "p_partkey")
+    sb = scan("supplier").select("s_suppkey", "s_nationkey").broadcast()  # b2
+    l = l.join(sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    c = scan("customer").semi(n, "c_nationkey", "n_nationkey")
+    cb = c.select("c_custkey").broadcast()                               # b3
+    o = scan("orders").filter((col("o_orderdate") >= days("1995-01-01")) &
+                              (col("o_orderdate") <= days("1996-12-31")))
+    o = o.semi(cb, "o_custkey", "c_custkey")
+    lj = l.join(o, "l_orderkey", "o_orderkey", ["o_orderdate"])
+    lj = lj.with_col(o_year=year(col("o_orderdate")))
+    g = lj.group_by(["o_year"], [
         ("total", "sum", _disc),
-        ("brazil", "sum", lambda t: ctx.xp.where(t["s_nationkey"] == br,
-                                                 _disc(t), 0.0)),
-    ], exchange="gather", final=True, groups_hint=16,
-        key_bits=[11])   # o_year from the 1970-2005 LUT, < 2^11
-    g = ctx.with_col(g, mkt_share=lambda t: t["brazil"] / t["total"])
-    return ctx.finalize(ctx.select(g, "o_year", "mkt_share"),
-                        sort_keys=[("o_year", True)], replicated=True)
+        ("brazil", "sum", where(col("s_nationkey") == br, _disc, 0.0)),
+    ], exchange="gather", final=True)
+    g = g.with_col(mkt_share=col("brazil") / col("total"))
+    return g.select("o_year", "mkt_share") \
+        .finalize(sort_keys=[("o_year", True)], replicated=True)

@@ -1,140 +1,134 @@
-"""TPC-H Q9-Q15 tensor plans."""
+"""TPC-H Q9-Q15 as lazy logical plans (builder API; see queries/__init__.py)."""
+from repro.core.plan import (alpha_rank, col, db_scale, isin, like, result,
+                             scan, scode, starts_with, where, year)
 from repro.core.table import days
-from .q01_08 import _disc, _in
+from .q01_08 import _disc
 
 __all__ = ["q9", "q10", "q11", "q12", "q13", "q14", "q15"]
 
 
-def q9(ctx):
+def q9():
     """Product type profit.  1 shuffle (lineitem->partkey) + 2 broadcasts."""
-    p = ctx.scan("part")
-    p = ctx.filter(p, ctx.like(p, "p_name", "green"))
-    pb = ctx.broadcast(ctx.select(p, "p_partkey"))                       # b1
-    s = ctx.scan("supplier")
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey", "s_nationkey"))        # b2
-    l = ctx.scan("lineitem")
-    l = ctx.join(l, ctx.scan("orders"), "l_orderkey", "o_orderkey",
-                 ["o_orderdate"])                                        # co-partitioned
-    l = ctx.semi(l, pb, "l_partkey", "p_partkey")
-    ls = ctx.shuffle(ctx.select(l, "l_partkey", "l_suppkey", "l_quantity",
-                                "l_extendedprice", "l_discount", "o_orderdate"),
-                     "l_partkey")                                        # s1
-    j = ctx.join(ls, ctx.scan("partsupp"), ("l_partkey", "l_suppkey"),
-                 ("ps_partkey", "ps_suppkey"), ["ps_supplycost"])        # partkey-local
-    j = ctx.join(j, sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
-    j = ctx.with_col(j, o_year=lambda t: ctx.year(t, "o_orderdate"))
-    j = ctx.with_col(j, grp=lambda t: t["s_nationkey"] * 16 + (t["o_year"] - 1992))
-    g = ctx.group_by(j, ["grp"], [
+    p = scan("part").filter(like("p_name", "green"))
+    pb = p.select("p_partkey").broadcast()                               # b1
+    sb = scan("supplier").select("s_suppkey", "s_nationkey").broadcast()  # b2
+    l = scan("lineitem").join(scan("orders"), "l_orderkey", "o_orderkey",
+                              ["o_orderdate"])                           # co-partitioned
+    l = l.semi(pb, "l_partkey", "p_partkey")
+    ls = l.select("l_partkey", "l_suppkey", "l_quantity", "l_extendedprice",
+                  "l_discount", "o_orderdate").shuffle("l_partkey")      # s1
+    j = ls.join(scan("partsupp"), ("l_partkey", "l_suppkey"),
+                ("ps_partkey", "ps_suppkey"), ["ps_supplycost"])         # partkey-local
+    j = j.join(sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
+    j = j.with_col(o_year=year(col("o_orderdate")))
+    j = j.with_col(grp=col("s_nationkey") * 16 + (col("o_year") - 1992))
+    g = j.group_by(["grp"], [
         ("n_name", "max", "s_nationkey"),
         ("o_year", "max", "o_year"),
-        ("sum_profit", "sum", lambda t: _disc(t) -
-         t["ps_supplycost"] * t["l_quantity"]),
-    ], exchange="gather", final=True, groups_hint=512,
-        key_bits=[9])   # grp = nationkey*16 + (year-1992) < 25*16 = 400
-    g = ctx.with_col(g, n_rank=lambda t: ctx.alpha_rank(t, "n_name"))
-    return ctx.finalize(ctx.select(g, "n_name", "n_rank", "o_year", "sum_profit"),
-                        sort_keys=[("n_rank", True), ("o_year", False)],
-                        replicated=True)
+        ("sum_profit", "sum",
+         _disc - col("ps_supplycost") * col("l_quantity")),
+    ], exchange="gather", final=True)
+    g = g.with_col(n_rank=alpha_rank("n_name"))
+    return g.select("n_name", "n_rank", "o_year", "sum_profit") \
+        .finalize(sort_keys=[("n_rank", True), ("o_year", False)],
+                  replicated=True)
 
 
-def q10(ctx):
+def q10():
     """Returned item reporting.  1 shuffle to customer partitioning."""
-    o = ctx.scan("orders")
-    o = ctx.filter(o, (o["o_orderdate"] >= days("1993-10-01")) &
-                   (o["o_orderdate"] < days("1994-01-01")))
-    l = ctx.scan("lineitem")
-    l = ctx.filter(l, ctx.eq(l, "l_returnflag", "R"))
-    j = ctx.join(l, o, "l_orderkey", "o_orderkey", ["o_custkey"])
-    g = ctx.group_by(j, ["o_custkey"], [("revenue", "sum", _disc)],
-                     exchange="shuffle")                                 # s1
-    j2 = ctx.join(g, ctx.scan("customer"), "o_custkey", "c_custkey",
-                  ["c_acctbal", "c_nationkey"])                          # custkey-local
-    return ctx.finalize(ctx.select(j2, "o_custkey", "revenue", "c_acctbal",
-                                   "c_nationkey"),
-                        sort_keys=[("revenue", False)], limit=20)
+    o = scan("orders").filter((col("o_orderdate") >= days("1993-10-01")) &
+                              (col("o_orderdate") < days("1994-01-01")))
+    l = scan("lineitem").filter(col("l_returnflag") ==
+                                scode("l_returnflag", "R"))
+    j = l.join(o, "l_orderkey", "o_orderkey", ["o_custkey"])
+    g = j.group_by(["o_custkey"], [("revenue", "sum", _disc)],
+                   exchange="shuffle")                                   # s1
+    j2 = g.join(scan("customer"), "o_custkey", "c_custkey",
+                ["c_acctbal", "c_nationkey"])                            # custkey-local
+    return j2.select("o_custkey", "revenue", "c_acctbal", "c_nationkey") \
+        .finalize(sort_keys=[("revenue", False)], limit=20)
 
 
-def q11(ctx):
+def q11():
     """Important stock identification.  1 broadcast (DE suppliers) + allreduce.
 
     Paper counts 1 shuffle + 1 broadcast; under §4.3 partsupp@ps_partkey the
     group-by is local, removing their shuffle (DESIGN.md deviation)."""
-    s = ctx.scan("supplier")
-    s = ctx.filter(s, s["s_nationkey"] == ctx.db.code("n_name", "GERMANY"))
-    sb = ctx.broadcast(ctx.select(s, "s_suppkey"))                       # b1
-    ps = ctx.semi(ctx.scan("partsupp"), sb, "ps_suppkey", "s_suppkey")
-    val = lambda t: t["ps_supplycost"] * t["ps_availqty"]
-    g = ctx.group_by(ps, ["ps_partkey"], [("value", "sum", val)],
-                     exchange="local")                                   # partkey-local
-    tot = ctx.agg_scalar(ps, [("t", "sum", val)])["t"]
-    g = ctx.filter(g, g["value"] > tot * (0.0001 / ctx.db.scale))
-    g = ctx.shrink(g, 1 << 20)   # result rows bounded well below partkeys
-    return ctx.finalize(g, sort_keys=[("value", False)])
+    s = scan("supplier").filter(col("s_nationkey") ==
+                                scode("n_name", "GERMANY"))
+    sb = s.select("s_suppkey").broadcast()                               # b1
+    ps = scan("partsupp").semi(sb, "ps_suppkey", "s_suppkey")
+    val = col("ps_supplycost") * col("ps_availqty")
+    g = ps.group_by(["ps_partkey"], [("value", "sum", val)],
+                    exchange="local")                                    # partkey-local
+    tot = ps.agg_scalar([("t", "sum", val)])["t"]
+    g = g.filter(col("value") > tot * (0.0001 / db_scale()))
+    g = g.shrink(1 << 20)   # result rows bounded well below partkeys
+    return g.finalize(sort_keys=[("value", False)])
 
 
-def q12(ctx):
+def q12():
     """Shipping modes / order priority.  Fully co-partitioned: no exchange."""
-    l = ctx.scan("lineitem")
-    m = (ctx.isin(l, "l_shipmode", ["MAIL", "SHIP"]) &
-         (l["l_commitdate"] < l["l_receiptdate"]) &
-         (l["l_shipdate"] < l["l_commitdate"]) &
-         (l["l_receiptdate"] >= days("1994-01-01")) &
-         (l["l_receiptdate"] < days("1995-01-01")))
-    l = ctx.filter(l, m)
-    j = ctx.join(l, ctx.scan("orders"), "l_orderkey", "o_orderkey",
-                 ["o_orderpriority"])
-    hi = [ctx.db.code("o_orderpriority", "1-URGENT"),
-          ctx.db.code("o_orderpriority", "2-HIGH")]
-    g = ctx.group_by(j, ["l_shipmode"], [
-        ("high_line_count", "sum",
-         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 1, 0)),
-        ("low_line_count", "sum",
-         lambda t: ctx.xp.where(_in(t["o_orderpriority"], hi), 0, 1)),
-    ], exchange="gather", final=True, groups_hint=16,
-        key_bits=[ctx.dict_bits("l_shipmode")])
-    g = ctx.with_col(g, m_rank=lambda t: ctx.alpha_rank(t, "l_shipmode"))
-    return ctx.finalize(g, sort_keys=[("m_rank", True)], replicated=True)
+    l = scan("lineitem").filter(
+        isin(col("l_shipmode"), [scode("l_shipmode", "MAIL"),
+                                 scode("l_shipmode", "SHIP")]) &
+        (col("l_commitdate") < col("l_receiptdate")) &
+        (col("l_shipdate") < col("l_commitdate")) &
+        (col("l_receiptdate") >= days("1994-01-01")) &
+        (col("l_receiptdate") < days("1995-01-01")))
+    j = l.join(scan("orders"), "l_orderkey", "o_orderkey",
+               ["o_orderpriority"])
+    hi = isin(col("o_orderpriority"),
+              [scode("o_orderpriority", "1-URGENT"),
+               scode("o_orderpriority", "2-HIGH")])
+    g = j.group_by(["l_shipmode"], [
+        ("high_line_count", "sum", where(hi, 1, 0)),
+        ("low_line_count", "sum", where(hi, 0, 1)),
+    ], exchange="gather", final=True)
+    g = g.with_col(m_rank=alpha_rank("l_shipmode"))
+    return g.finalize(sort_keys=[("m_rank", True)], replicated=True)
 
 
-def q13(ctx):
-    """Customer distribution.  1 shuffle (orders -> custkey) + left join."""
-    o = ctx.scan("orders")
-    o = ctx.filter(o, ~ctx.like(o, "o_comment", "special", "requests"))
-    go = ctx.group_by(o, ["o_custkey"], [("c_count", "count", None)],
-                      exchange="shuffle")                                # s1
-    lj = ctx.left(ctx.scan("customer"), go, "c_custkey", "o_custkey",
-                  ["c_count"], {"c_count": 0})                           # custkey-local
-    g = ctx.group_by(lj, ["c_count"], [("custdist", "count", None)],
-                     exchange="gather", final=True, groups_hint=256)
-    return ctx.finalize(g, sort_keys=[("custdist", False), ("c_count", False)],
-                        replicated=True)
+def q13():
+    """Customer distribution.  1 shuffle (orders -> custkey) + left join.
+
+    ``groups_hint=256`` on the c_count histogram is a plan-author claim the
+    planner cannot prove (orders-per-customer is data-dependent) — exactly
+    the case the explicit hint remains for; overflow re-executes if a
+    customer ever exceeds it."""
+    o = scan("orders").filter(~like("o_comment", "special", "requests"))
+    go = o.group_by(["o_custkey"], [("c_count", "count", None)],
+                    exchange="shuffle")                                  # s1
+    lj = scan("customer").left(go, "c_custkey", "o_custkey",
+                               ["c_count"], {"c_count": 0})              # custkey-local
+    g = lj.group_by(["c_count"], [("custdist", "count", None)],
+                    exchange="gather", final=True, groups_hint=256)
+    return g.finalize(sort_keys=[("custdist", False), ("c_count", False)],
+                      replicated=True)
 
 
-def q14(ctx):
+def q14():
     """Promotion effect.  1 shuffle of the date-filtered lineitem slice."""
-    l = ctx.scan("lineitem")
-    l = ctx.filter(l, (l["l_shipdate"] >= days("1995-09-01")) &
-                   (l["l_shipdate"] < days("1995-10-01")))
-    ls = ctx.shuffle(ctx.select(l, "l_partkey", "l_extendedprice", "l_discount"),
-                     "l_partkey")                                        # s1
-    j = ctx.join(ls, ctx.scan("part"), "l_partkey", "p_partkey", ["p_type"])
-    promo = ctx.starts_with(j, "p_type", "PROMO")
-    s = ctx.agg_scalar(j, [
-        ("promo", "sum", lambda t: ctx.xp.where(promo, _disc(t), 0.0)),
+    l = scan("lineitem").filter((col("l_shipdate") >= days("1995-09-01")) &
+                                (col("l_shipdate") < days("1995-10-01")))
+    ls = l.select("l_partkey", "l_extendedprice",
+                  "l_discount").shuffle("l_partkey")                     # s1
+    j = ls.join(scan("part"), "l_partkey", "p_partkey", ["p_type"])
+    s = j.agg_scalar([
+        ("promo", "sum", where(starts_with("p_type", "PROMO"), _disc, 0.0)),
         ("total", "sum", _disc)])
-    return {"promo_revenue": 100.0 * s["promo"] / s["total"]}
+    return result(promo_revenue=100.0 * s["promo"] / s["total"])
 
 
-def q15(ctx):
+def q15():
     """Top supplier.  1 shuffle of per-supplier partials + allreduce max."""
-    l = ctx.scan("lineitem")
-    l = ctx.filter(l, (l["l_shipdate"] >= days("1996-01-01")) &
-                   (l["l_shipdate"] < days("1996-04-01")))
-    g = ctx.group_by(l, ["l_suppkey"], [("total_revenue", "sum", _disc)],
-                     exchange="shuffle")                                 # s1
-    mx = ctx.agg_scalar(g, [("mx", "max", "total_revenue")])["mx"]
-    top = ctx.filter(g, g["total_revenue"] >= mx * (1 - 1e-12))
-    top = ctx.shrink(top, 1024)          # max-revenue ties are rare
-    j = ctx.join(top, ctx.scan("supplier"), "l_suppkey", "s_suppkey",
+    l = scan("lineitem").filter((col("l_shipdate") >= days("1996-01-01")) &
+                                (col("l_shipdate") < days("1996-04-01")))
+    g = l.group_by(["l_suppkey"], [("total_revenue", "sum", _disc)],
+                   exchange="shuffle")                                   # s1
+    mx = g.agg_scalar([("mx", "max", "total_revenue")])["mx"]
+    top = g.filter(col("total_revenue") >= mx * (1 - 1e-12))
+    top = top.shrink(1024)               # max-revenue ties are rare
+    j = top.join(scan("supplier"), "l_suppkey", "s_suppkey",
                  ["s_nationkey"])                                        # suppkey-local
-    return ctx.finalize(j, sort_keys=[("l_suppkey", True)])
+    return j.finalize(sort_keys=[("l_suppkey", True)])

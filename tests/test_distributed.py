@@ -54,6 +54,21 @@ for qid in (1, 3, 9, 10, 13, 16, 18, 22):
 
 
 @pytest.mark.slow
+def test_distributed_all_22_planner_path():
+    """Every builder plan runs SPMD and matches the NumPy reference, with
+    runtime exchange counts equal to the IR-derived static counts — the full
+    three-backend acceptance sweep for the planner path."""
+    out = _run(_PRELUDE + """
+for qid in sorted(QUERIES):
+    stats = check(qid)
+    assert stats.counts() == QUERIES[qid].static_counts(), (
+        qid, stats.counts(), QUERIES[qid].static_counts())
+    print("q%d ok" % qid)
+""", timeout=2400)
+    assert out.count("ok") == 22
+
+
+@pytest.mark.slow
 def test_distributed_per_column_exchange_matches_packed():
     """Paper-faithful per-column exchange == packed fused exchange."""
     _run(_PRELUDE + """

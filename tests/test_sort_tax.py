@@ -132,11 +132,13 @@ def test_hash_join_path_byte_identical(db, qid):
                                    rtol=1e-7, err_msg=f"q{qid} {k} vs oracle")
 
 
-# Absolute per-query HLO sort budgets for the local plans (phase 2: hinted
-# group-bys are sortless, shuffle dispatch is sortless).  Tighter than the
-# seed-relative 40% rule; the fuller gate lives in benchmarks/bench_sort_tax.py.
+# Absolute per-query HLO sort budgets for the local plans (phase 2/3:
+# planner-inferred group-bys are sortless, shuffle dispatch is sortless).
+# Tighter than the seed-relative 40% rule; the fuller gate lives in
+# benchmarks/bench_sort_tax.py.  Compiled with inference pinned ON so the
+# REPRO_PLANNER=0 CI leg measures the same program.
 #   q1  = 1 final ORDER BY              (group-by direct, was 2)
-#   q3  = 4 (unhinted orderkey group-by keeps its one sort)
+#   q3  = 4 (3 once the planner proves l_orderkey's width at this SF)
 #   q6  = 0 (scalar aggregation is the trivial direct domain)
 #   q9  = 4 build indexes + 1 final ORDER BY (group-by direct, was 6)
 #   q12 = 1 build index + 1 final ORDER BY   (group-by direct, was 3)
@@ -149,7 +151,7 @@ def test_hlo_sort_count_budget(db, qid):
 
     def run(tables):
         ctx = B.LocalContext(db, tables)
-        out = QUERIES[qid](ctx)
+        out = QUERIES[qid].run(ctx, infer=True)
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
