@@ -35,7 +35,7 @@ def main():
                     if p2p:
                         out, st = broadcast_table_p2p(t, "data", N)
                     else:
-                        out, st = broadcast_table(t, "data", N)
+                        out, _, st = broadcast_table(t, "data", N)
                     stats_holder[p2p] = st
                     return out.count.reshape(1)
                 return shard_map(body, mesh=mesh, in_specs=P("data"),

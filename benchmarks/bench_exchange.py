@@ -51,7 +51,7 @@ def main():
         def do_broadcast(key0):
             def body(_):
                 t = _mktable(rows)
-                out, _ = broadcast_table(t, "data", N)
+                out, _, _ = broadcast_table(t, "data", N)
                 return out.count.reshape(1)
             return shard_map(body, mesh=mesh, in_specs=P("data"),
                              out_specs=P("data"))(

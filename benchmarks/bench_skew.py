@@ -56,7 +56,7 @@ def main():
                 t = Table({"k": jnp.arange(cap, dtype=jnp.int64),
                            "v": jnp.ones((cap,), jnp.float64)},
                           c[0].astype(jnp.int32))
-                out, _ = broadcast_table(t, "data", N)
+                out, _, _ = broadcast_table(t, "data", N)
                 return out.count.reshape(1)
             return shard_map(body, mesh=mesh, in_specs=P("data"),
                              out_specs=P("data"))(cnts)

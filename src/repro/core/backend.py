@@ -35,6 +35,7 @@ from . import compat
 from . import exchange as ex
 from . import reference as ref
 from . import relational as rel
+from . import wire as wi
 from .table import Database, Table, from_numpy, to_numpy
 
 __all__ = [
@@ -109,12 +110,37 @@ class _BaseContext:
 
     join_method = "sorted"  # "sorted" (searchsorted) | "hash" (Pallas probe)
 
-    def __init__(self, db: Database, capacity_factor: float = 2.0):
+    def __init__(self, db: Database, capacity_factor: float = 2.0,
+                 wire_format: str | None = None):
         self.db = db
         self.dicts = db.dicts
         self.stats = PlanStats()
         self.capacity_factor = capacity_factor
+        self.wire_format = wire_format or wi.wire_default()
         self._join_cache: dict[tuple, tuple] = {}
+
+    @property
+    def wire_narrow(self) -> bool:
+        return self.wire_format == "narrow"
+
+    def _wire_entry(self, kind: str, t, wire, narrow: bool | None = None,
+                    ) -> ex.ExchangeStats:
+        """Trace-time per-row wire descriptor of an exchange payload.
+
+        Every backend logs one of these per exchange — the non-distributed
+        backends with the per-row fields only — so the IR-derived static
+        report (``planner.static_wire_stats``) can be asserted equal to
+        runtime stats on all three engines."""
+        names = sorted(t) if isinstance(t, dict) else t.names
+        dtypes = {n: np.dtype(t[n].dtype) for n in names}
+        if narrow is None:
+            narrow = self.wire_narrow
+        fmt = wi.plan_wire_format(names, dtypes, bounds=wire, narrow=narrow)
+        return ex.ExchangeStats(
+            kind=kind, participants=1, message_bytes=0, total_bytes=0,
+            collectives=0, row_wire_bytes=fmt.row_wire_bytes,
+            row_logical_bytes=fmt.row_logical_bytes,
+            wire="narrow" if fmt.narrow else "wide")
 
     def bucket_cap(self) -> int:
         """Per-bucket capacity of the Pallas hash-join table, scaled by the
@@ -255,14 +281,18 @@ class RefContext(_BaseContext):
                              self._key(build, build_on), take, defaults)
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None):
+                 groups_hint=None, key_bits=None, wire=None):
         # key_bits is a JAX-engine planning hint; the oracle ignores it
-        if exchange == "shuffle":
-            self._count("shuffle")
-        elif exchange == "gather":
-            self._count("gather" if final else "broadcast")
         aggs, avg_post = _expand_avg(list(aggs))
         out = ref.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
+        # the exchange (were this distributed) moves the expanded partial —
+        # the entry is logged AFTER agg-expression scalar sub-queries ran,
+        # matching the distributed backend's partial-then-exchange order
+        if exchange == "shuffle":
+            self._count("shuffle", self._wire_entry("shuffle", out, wire))
+        elif exchange == "gather":
+            kind = "gather" if final else "broadcast"
+            self._count(kind, self._wire_entry(kind, out, wire))
         for name in avg_post:
             out[name] = out[f"__{name}_s"] / np.maximum(out[f"__{name}_c"], 1)
             del out[f"__{name}_s"], out[f"__{name}_c"]
@@ -278,21 +308,25 @@ class RefContext(_BaseContext):
             del out[f"__{name}_s"], out[f"__{name}_c"]
         return out
 
-    def shuffle(self, t, key):
-        self._count("shuffle")
+    def shuffle(self, t, key, wire=None):
+        self._count("shuffle", self._wire_entry("shuffle", t, wire))
         return t
 
-    def broadcast(self, t, p2p=False):
-        self._count("broadcast_p2p" if p2p else "broadcast")
+    def broadcast(self, t, p2p=False, wire=None):
+        kind = "broadcast_p2p" if p2p else "broadcast"
+        # the p2p variant is the §7.1 baseline and deliberately stays wide
+        self._count(kind, self._wire_entry(kind, t, wire,
+                                           narrow=False if p2p else None))
         return t
 
     def shrink(self, t, cap):
         self.stats.overflow_checks += 1
         return t
 
-    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False,
+                 wire=None):
         if not replicated:
-            self._count("gather")
+            self._count("gather", self._wire_entry("gather", t, wire))
         if sort_keys:
             t = ref.sort_by(t, sort_keys)
         if limit is not None:
@@ -312,8 +346,9 @@ class LocalContext(_BaseContext):
     distributed = False
 
     def __init__(self, db, tables: dict[str, Table], capacity_factor=2.0,
-                 join_method: str = "sorted", use_kernel: bool | None = None):
-        super().__init__(db, capacity_factor)
+                 join_method: str = "sorted", use_kernel: bool | None = None,
+                 wire_format: str | None = None):
+        super().__init__(db, capacity_factor, wire_format)
         self._tables = tables
         self.overflow = jnp.asarray(False)
         self.join_method = join_method
@@ -385,11 +420,7 @@ class LocalContext(_BaseContext):
                              index=self._build_index(build, build_on))
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None):
-        if exchange == "shuffle":
-            self._count("shuffle")
-        elif exchange == "gather":
-            self._count("gather" if final else "broadcast")
+                 groups_hint=None, key_bits=None, wire=None):
         aggs, avg_post = _expand_avg(list(aggs))
         out, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
                                       key_bits=key_bits,
@@ -399,6 +430,13 @@ class LocalContext(_BaseContext):
         if groups_hint is not None:
             out, ov = rel.static_shrink(out, min(out.capacity, groups_hint))
             self.overflow = self.overflow | ov
+        # log after the partial (and its agg-expression sub-queries), in the
+        # same position the distributed engine issues the real exchange
+        if exchange == "shuffle":
+            self._count("shuffle", self._wire_entry("shuffle", out, wire))
+        elif exchange == "gather":
+            kind = "gather" if final else "broadcast"
+            self._count(kind, self._wire_entry(kind, out, wire))
         for name in avg_post:
             cnt = jnp.maximum(out[f"__{name}_c"], 1)
             out = out.replace(**{name: out[f"__{name}_s"] / cnt})
@@ -416,12 +454,14 @@ class LocalContext(_BaseContext):
             del out[f"__{name}_s"], out[f"__{name}_c"]
         return out
 
-    def shuffle(self, t, key):
-        self._count("shuffle")
+    def shuffle(self, t, key, wire=None):
+        self._count("shuffle", self._wire_entry("shuffle", t, wire))
         return t
 
-    def broadcast(self, t, p2p=False):
-        self._count("broadcast_p2p" if p2p else "broadcast")
+    def broadcast(self, t, p2p=False, wire=None):
+        kind = "broadcast_p2p" if p2p else "broadcast"
+        self._count(kind, self._wire_entry(kind, t, wire,
+                                           narrow=False if p2p else None))
         return t
 
     def shrink(self, t, cap):
@@ -430,9 +470,10 @@ class LocalContext(_BaseContext):
         self.overflow = self.overflow | ov
         return t
 
-    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False,
+                 wire=None):
         if not replicated:
-            self._count("gather")
+            self._count("gather", self._wire_entry("gather", t, wire))
         if sort_keys:
             t = rel.sort_by(t, sort_keys)   # sorted output is compact
         else:
@@ -455,42 +496,50 @@ class DistContext(LocalContext):
 
     def __init__(self, db, tables, axis_name: str, num_partitions: int,
                  capacity_factor=2.0, packed_exchange=True,
-                 join_method: str = "sorted", use_kernel: bool | None = None):
-        super().__init__(db, tables, capacity_factor, join_method, use_kernel)
+                 join_method: str = "sorted", use_kernel: bool | None = None,
+                 wire_format: str | None = None):
+        super().__init__(db, tables, capacity_factor, join_method, use_kernel,
+                         wire_format)
         self.axis = axis_name
         self.N = num_partitions
         self.packed = packed_exchange
 
     # -- exchanges ----------------------------------------------------------
-    def shuffle(self, t, key, dest_ids=None):
+    def shuffle(self, t, key, dest_ids=None, wire=None):
         self._count("shuffle")
         keyv = t[key] if isinstance(key, str) else self._key(t, key)
         cap_per_dest = max(8, math.ceil(t.capacity * self.capacity_factor / self.N))
         out, ov, _, stats = ex.shuffle(t, keyv, self.axis, self.N, cap_per_dest,
                                        packed=self.packed, dest_ids=dest_ids,
-                                       use_kernel=self.use_kernel)
+                                       use_kernel=self.use_kernel,
+                                       wire=wire, narrow=self.wire_narrow)
         self.stats.log.append(stats)
         self.overflow = self.overflow | ov
         return out
 
-    def broadcast(self, t, p2p=False):
+    def broadcast(self, t, p2p=False, wire=None):
         self._count("broadcast_p2p" if p2p else "broadcast")
         if p2p:
             out, stats = ex.broadcast_table_p2p(t, self.axis, self.N)
         else:
-            out, stats = ex.broadcast_table(t, self.axis, self.N, packed=self.packed)
+            out, ov, stats = ex.broadcast_table(t, self.axis, self.N,
+                                                packed=self.packed, wire=wire,
+                                                narrow=self.wire_narrow)
+            self.overflow = self.overflow | ov
         self.stats.log.append(stats)
         return out
 
     # -- distributed aggregation --------------------------------------------
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None):
+                 groups_hint=None, key_bits=None, wire=None):
         """groups_hint: static bound on distinct groups (e.g. a dictionary
         domain) — shrinks the partial aggregate BEFORE the exchange, so a
         gather/shuffle of a wide scan's partial moves O(groups), not
         O(scan capacity).  Overflow feeds the re-execution runner.
         key_bits: provable per-column key bit widths — both the per-device
-        partial and the post-exchange merge run the sortless direct path."""
+        partial and the post-exchange merge run the sortless direct path.
+        wire: provable (lo, hi) bounds per partial column — the exchange
+        ships the partial at its inferred lane widths."""
         aggs, avg_post = _expand_avg(list(aggs))
         partial, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
                                           key_bits=key_bits,
@@ -514,14 +563,19 @@ class DistContext(LocalContext):
                     partial.capacity * self.capacity_factor / self.N))
                 moved, ov, _, stats = ex.shuffle(partial, keyv, self.axis, self.N,
                                                  cap_per_dest, packed=self.packed,
-                                                 use_kernel=self.use_kernel)
+                                                 use_kernel=self.use_kernel,
+                                                 wire=wire,
+                                                 narrow=self.wire_narrow)
                 self.stats.log.append(stats)
                 self.overflow = self.overflow | ov
             elif exchange == "gather":
-                self._count("gather" if final else "broadcast")
-                moved, stats = ex.broadcast_table(partial, self.axis, self.N,
-                                                  packed=self.packed)
-                self.stats.log.append(stats)
+                kind = "gather" if final else "broadcast"
+                self._count(kind)
+                moved, ov, stats = ex.broadcast_table(
+                    partial, self.axis, self.N, packed=self.packed,
+                    wire=wire, narrow=self.wire_narrow)
+                self.overflow = self.overflow | ov
+                self.stats.log.append(dataclasses.replace(stats, kind=kind))
             else:
                 raise ValueError(exchange)
             # the partial->global merge reuses the same provable widths, so a
@@ -550,7 +604,8 @@ class DistContext(LocalContext):
             del out[f"__{name}_s"], out[f"__{name}_c"]
         return out
 
-    def finalize(self, t, sort_keys=None, limit=None, replicated=False):
+    def finalize(self, t, sort_keys=None, limit=None, replicated=False,
+                 wire=None):
         """Final result collection: local order/limit, gather, global order.
 
         ``replicated=True`` marks tables already merged on every device (e.g.
@@ -568,8 +623,11 @@ class DistContext(LocalContext):
             t = rel.sort_by(t, sort_keys)
         if limit is not None:
             t = rel.limit(t, limit)   # local top-k before the gather
-        t, stats = ex.broadcast_table(t, self.axis, self.N, packed=self.packed)
-        self.stats.log.append(stats)
+        t, ov, stats = ex.broadcast_table(t, self.axis, self.N,
+                                          packed=self.packed, wire=wire,
+                                          narrow=self.wire_narrow)
+        self.overflow = self.overflow | ov
+        self.stats.log.append(dataclasses.replace(stats, kind="gather"))
         if sort_keys:
             t = rel.sort_by(t, sort_keys)
         else:
@@ -583,8 +641,9 @@ class DistContext(LocalContext):
 # drivers
 # ===========================================================================
 
-def run_reference(query_fn, db: Database) -> tuple[dict, PlanStats]:
-    ctx = RefContext(db)
+def run_reference(query_fn, db: Database, wire_format: str | None = None,
+                  ) -> tuple[dict, PlanStats]:
+    ctx = RefContext(db, wire_format=wire_format)
     out = query_fn(ctx)
     if isinstance(out, dict) and out and \
             np.ndim(next(iter(out.values()))) == 0:
@@ -603,13 +662,15 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
 
 def run_local(query_fn, db: Database, jit: bool = True,
               join_method: str = "sorted", use_kernel: bool | None = None,
-              capacity_factor: float = 2.0) -> tuple[dict, PlanStats]:
+              capacity_factor: float = 2.0, wire_format: str | None = None,
+              ) -> tuple[dict, PlanStats]:
     tables = _np_db_to_tables(db)
     holder = {}
 
     def run(tables):
         ctx = LocalContext(db, tables, capacity_factor=capacity_factor,
-                           join_method=join_method, use_kernel=use_kernel)
+                           join_method=join_method, use_kernel=use_kernel,
+                           wire_format=wire_format)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
@@ -694,6 +755,7 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
                     partition_keys: dict | None = None,
                     join_method: str = "sorted",
                     use_kernel: bool | None = None,
+                    wire_format: str | None = None,
                     ) -> tuple[dict, PlanStats, Any]:
     """Run a query SPMD over ``mesh[axis]``; returns (result, stats, overflow).
 
@@ -710,7 +772,8 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
             cnt = cols.pop("__count").reshape(())
             tables[name] = Table(cols, cnt)
         ctx = DistContext(db, tables, axis, n, capacity_factor,
-                          packed_exchange, join_method, use_kernel)
+                          packed_exchange, join_method, use_kernel,
+                          wire_format)
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):

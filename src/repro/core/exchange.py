@@ -4,20 +4,44 @@ GPU/NCCL -> TPU/XLA mapping (DESIGN.md §2):
 
   shuffle    NCCL N^2 ncclSend/Recv (variable sizes)  ->  capacity-bounded
              ``jax.lax.all_to_all`` with per-destination fixed-size row buffers
-             and validity counts (the MoE-dispatch idiom).  The pre-exchange
-             size-metadata round becomes an all_to_all of per-destination
-             counts, used for valid-row reconstruction, skew statistics, and
-             overflow-triggered re-execution.
+             and validity counts (the MoE-dispatch idiom).
   broadcast  ncclBroadcast one-to-all ring             ->  ``jax.lax.all_gather``
              (XLA lowers to the ICI ring — exactly the paper's Eq. 1 model).
              A deliberately-naive p2p ring variant (``broadcast_table_p2p``)
              reproduces §7.1 / Figure 19.
   allreduce  ncclAllReduce                             ->  ``jax.lax.psum`` etc.
 
+Wire format (packed exchanges)
+------------------------------
 Columns are exchanged either one at a time (paper-faithful, §2.3 "we exchange
-one column at a time") or packed into a single 32-bit-word buffer so the whole
-table moves in ONE collective (beyond-paper optimization; the paper's own
-Hockney model §3.6 predicts the win for small messages).
+one column at a time") or packed into a single int32 buffer so the whole
+table moves in ONE collective.  The packed layout is a planner-statistics-
+driven **wire format** (:mod:`repro.core.wire`):
+
+  * **Lane layout** — with per-column ``(lo, hi)`` bounds (the same min/max
+    statistics that feed ``key_bits``), integer columns ship biased at their
+    inferred width: 8/16-bit lanes share int32 words via shift/or, a 64-bit
+    column whose span fits 32 bits ships as one biased word, a provably
+    constant column is not shipped at all, and bool is always an 8-bit lane.
+    float64 stays split across two words — mantissas cannot be range-
+    compressed — and anything unbounded ships verbatim.  ``REPRO_WIRE=wide``
+    forces the legacy full-width layout (the differential leg); without
+    planner bounds the format is wide by construction.
+  * **Header row** — the paper's pre-exchange size-metadata round is FUSED
+    into the payload: row 0 of each per-destination block (word 0) carries
+    the sender's row count, so a packed ``shuffle``/``broadcast_table`` is
+    ONE collective, not a counts round plus a payload round.  The per-column
+    mode keeps the separate metadata round (it is the §2.3 baseline).
+  * **Overflow contract** — a narrowed column is range-checked per valid row
+    at pack time; a value outside its claimed bounds sets the returned
+    overflow flag (ORed into ``ctx.overflow`` -> the fault runner re-executes,
+    dropping inference and hence the narrow format).  Lying bounds can
+    therefore cost a retry but can never silently truncate a value.
+
+``ExchangeStats`` reports both actual wire bytes (packed words incl. the
+header row) and logical dtype-true bytes, so the compression ratio is visible
+per exchange and the §3.6 Hockney model consumes what actually moves
+(:func:`repro.core.perfmodel.exchange_time_from_stats`).
 
 Deferred compaction: exchange OUTPUTS are masked tables (received rows are
 front-packed per sender block; the validity mask exposes them without a sort).
@@ -28,13 +52,13 @@ reconstructed from per-shard counts alone, a true contiguity boundary;
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Sequence
+from typing import Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import wire as wi
 from .table import Table
 from .relational import agg_kernel_default, ensure_compact, hash_partition_ids
 # imported at module scope (not lazily inside traced code): the kernel module
@@ -54,50 +78,62 @@ __all__ = [
 
 @dataclasses.dataclass
 class ExchangeStats:
-    """Static (trace-time) descriptor of one exchange — feeds the perf models."""
+    """Static (trace-time) descriptor of one exchange — feeds the perf models.
+
+    ``message_bytes``/``total_bytes`` are ACTUAL wire bytes (packed words x 4,
+    including the fused counts header row and, in per-column mode, the
+    separate metadata round); ``logical_bytes`` is the dtype-true payload
+    size per message, so ``logical_bytes / message_bytes`` approaches the
+    wire-compression ratio as capacity padding amortizes.  The per-row pair
+    (``row_wire_bytes``, ``row_logical_bytes``) is capacity-independent and
+    equals the IR-derived static numbers on every backend
+    (``planner.static_wire_stats``).
+    """
     kind: str                 # "shuffle" | "broadcast" | "broadcast_p2p" | "gather"
     participants: int         # N
-    message_bytes: int        # per p2p message (shuffle) / per-shard payload (bcast)
-    total_bytes: int          # bytes leaving each device
+    message_bytes: int        # wire bytes per p2p message / per-shard payload
+    total_bytes: int          # wire bytes leaving each device
     collectives: int          # number of collective ops issued
+    logical_bytes: int = 0    # dtype-true payload bytes per message
+    row_wire_bytes: int = 0   # packed row width on the wire
+    row_logical_bytes: int = 0  # dtype-true row width
+    wire: str = "wide"        # "narrow" | "wide"
+
+    @property
+    def compression(self) -> float:
+        """Logical-to-wire row compression ratio (>= 1 when narrowing wins)."""
+        return self.row_logical_bytes / max(1, self.row_wire_bytes)
 
 
 # ---------------------------------------------------------------------------
 # column packing
 # ---------------------------------------------------------------------------
 
-def _words(dt) -> int:
-    return max(1, np.dtype(dt).itemsize // 4)
+def _table_format(t: Table, bounds: Mapping | None, narrow: bool | None,
+                  ) -> wi.WireFormat:
+    if narrow is None:
+        narrow = wi.wire_default() == "narrow"
+    return wi.plan_wire_format(
+        t.names, {n: np.dtype(t[n].dtype) for n in t.names},
+        bounds=bounds, narrow=narrow)
 
 
-def pack_columns(t: Table) -> tuple[jax.Array, list[tuple[str, np.dtype, int]]]:
-    """Table columns -> (capacity, total_words) int32 buffer + unpack spec."""
-    bufs, spec = [], []
-    for name in t.names:
-        v = t[name]
-        if v.dtype == jnp.bool_:
-            v = v.astype(jnp.int32)
-        w = _words(v.dtype)
-        part = jax.lax.bitcast_convert_type(v, jnp.int32)
-        if part.ndim == 1:
-            part = part[:, None]
-        bufs.append(part)
-        spec.append((name, np.dtype(t[name].dtype), w))
-    return jnp.concatenate(bufs, axis=1), spec
+def pack_columns(t: Table, wire: Mapping | None = None,
+                 narrow: bool | None = None,
+                 ) -> tuple[jax.Array, wi.WireFormat, jax.Array]:
+    """Table columns -> ((capacity, words) int32 buffer, format, overflow).
+
+    ``wire`` maps column names to provable ``(lo, hi)`` bounds (planner
+    statistics); ``narrow=None`` follows ``REPRO_WIRE``.  Without bounds the
+    layout is the legacy full-width format and overflow is statically False.
+    """
+    fmt = _table_format(t, wire, narrow)
+    buf, overflow = wi.pack_table(t, fmt)
+    return buf, fmt, overflow
 
 
-def unpack_columns(buf: jax.Array, spec) -> dict[str, jax.Array]:
-    cols, off = {}, 0
-    for name, dt, w in spec:
-        part = buf[:, off:off + w]
-        if dt == np.bool_:
-            cols[name] = part[:, 0].astype(jnp.bool_)
-        elif w == 1:
-            cols[name] = jax.lax.bitcast_convert_type(part[:, 0], dt)
-        else:
-            cols[name] = jax.lax.bitcast_convert_type(part, dt)
-        off += w
-    return cols
+def unpack_columns(buf: jax.Array, fmt: wi.WireFormat) -> dict[str, jax.Array]:
+    return wi.unpack_table(buf, fmt)
 
 
 # ---------------------------------------------------------------------------
@@ -111,10 +147,12 @@ def _dispatch_offsets(dest: jax.Array, num_partitions: int,
     Returns (slot, counts): ``slot[i]`` is row i's index within its destination
     bucket, ``counts[d]`` the number of rows headed to d.  Rows are ranked by
     a radix-histogram counting rank (``kernels/radix_hist.counting_rank``:
-    per-block histogram + prefix sum + per-row offset) — byte-identical slot
-    assignment to the previous stable destination sort, with ZERO sorts.
-    Destinations may include the drop bucket ``num_partitions`` (padding /
-    invalid rows); its rows are ranked too but excluded from ``counts``.
+    one fused Pallas pass — per-block histogram, triangular-matmul exclusive
+    rank, running-total carry — or the block-streamed jnp oracle) —
+    byte-identical slot assignment to the previous stable destination sort,
+    with ZERO sorts.  Destinations may include the drop bucket
+    ``num_partitions`` (padding / invalid rows); its rows are ranked too but
+    excluded from ``counts``.
     """
     if use_kernel is None:
         use_kernel = agg_kernel_default()
@@ -127,6 +165,7 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
             cap_per_dest: int, packed: bool = True,
             dest_ids: jax.Array | None = None,
             use_kernel: bool | None = None,
+            wire: Mapping | None = None, narrow: bool | None = None,
             ) -> tuple[Table, jax.Array, jax.Array, ExchangeStats]:
     """Repartition ``t`` by ``hash(key) % N`` across the mesh axis.
 
@@ -134,7 +173,11 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
     table has capacity ``N * cap_per_dest``; ``overflowed`` is True on any
     device whose bucket exceeded ``cap_per_dest`` (rows are dropped — the
     fault-tolerant runner re-executes with a larger capacity factor, the
-    static-shape analogue of re-allocating NCCL receive buffers).
+    static-shape analogue of re-allocating NCCL receive buffers) OR whose
+    narrowed wire lanes saw an out-of-bounds value (re-execution recompiles
+    at full width).  In packed mode the per-destination counts ride as a
+    header row of the payload buffer, so the whole exchange — size metadata
+    included — is ONE ``all_to_all``.
     """
     N, cap = num_partitions, t.capacity
     dest = jnp.where(t.valid_mask(),
@@ -142,29 +185,46 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
                      N)  # padding rows -> virtual bucket N (dropped)
     slot, counts = _dispatch_offsets(dest, N, use_kernel=use_kernel)
     overflow = jnp.any(counts > cap_per_dest)
-
-    flat_idx = dest * cap_per_dest + jnp.minimum(slot, cap_per_dest - 1)
-    keep = (slot < cap_per_dest) & (dest < N)
-    flat_idx = jnp.where(keep, flat_idx, N * cap_per_dest)  # OOB -> dropped
-
-    # metadata round: who sends me how much (the paper's size exchange)
-    recv_counts = jax.lax.all_to_all(
-        jnp.minimum(counts, cap_per_dest).reshape(N, 1), axis_name, 0, 0)[:, 0]
-
-    def _exchange(col2d: jax.Array) -> jax.Array:
-        send = jnp.zeros((N * cap_per_dest, col2d.shape[1]), col2d.dtype) \
-            .at[flat_idx].set(col2d, mode="drop") \
-            .reshape(N, cap_per_dest, col2d.shape[1])
-        return jax.lax.all_to_all(send, axis_name, 0, 0).reshape(
-            N * cap_per_dest, col2d.shape[1])
+    counts_capped = jnp.minimum(counts, cap_per_dest).astype(jnp.int32)
 
     if packed:
-        buf, spec = pack_columns(t)
-        recv = _exchange(buf)
-        cols = unpack_columns(recv, spec)
+        # rows scatter into per-destination blocks of cap_per_dest+1 rows:
+        # row 0 is the counts header (word 0 = sender's row count for that
+        # destination), rows 1.. are the payload — one collective total.
+        blk = cap_per_dest + 1
+        flat_idx = dest * blk + 1 + jnp.minimum(slot, cap_per_dest - 1)
+        keep = (slot < cap_per_dest) & (dest < N)
+        flat_idx = jnp.where(keep, flat_idx, N * blk)  # OOB -> dropped
+        buf, fmt, ov_wire = pack_columns(t, wire=wire, narrow=narrow)
+        overflow = overflow | ov_wire
+        send = jnp.zeros((N * blk, fmt.words), jnp.int32) \
+            .at[flat_idx].set(buf, mode="drop") \
+            .at[jnp.arange(N) * blk, 0].set(counts_capped)
+        recv = jax.lax.all_to_all(send.reshape(N, blk, fmt.words),
+                                  axis_name, 0, 0)
+        recv_counts = recv[:, 0, 0]
+        cols = unpack_columns(recv[:, 1:, :].reshape(N * cap_per_dest,
+                                                     fmt.words), fmt)
         n_coll = 1
-        words = buf.shape[1]
-    else:  # paper-faithful: one collective per column
+        words = fmt.words
+        msg_rows = blk
+        row_wire, row_logical = fmt.row_wire_bytes, fmt.row_logical_bytes
+        wire_tag = "narrow" if fmt.narrow else "wide"
+    else:  # paper-faithful: one collective per column + the metadata round
+        flat_idx = dest * cap_per_dest + jnp.minimum(slot, cap_per_dest - 1)
+        keep = (slot < cap_per_dest) & (dest < N)
+        flat_idx = jnp.where(keep, flat_idx, N * cap_per_dest)
+
+        recv_counts = jax.lax.all_to_all(
+            counts_capped.reshape(N, 1), axis_name, 0, 0)[:, 0]
+
+        def _exchange(col2d: jax.Array) -> jax.Array:
+            send = jnp.zeros((N * cap_per_dest, col2d.shape[1]), col2d.dtype) \
+                .at[flat_idx].set(col2d, mode="drop") \
+                .reshape(N, cap_per_dest, col2d.shape[1])
+            return jax.lax.all_to_all(send, axis_name, 0, 0).reshape(
+                N * cap_per_dest, col2d.shape[1])
+
         cols = {}
         words = 0
         for name in t.names:
@@ -177,7 +237,11 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
             got = _exchange(part)
             cols[name] = _unbitcast(got, t[name].dtype)
             words += part.shape[1]
-        n_coll = len(t.names)
+        n_coll = len(t.names) + 1              # + metadata round
+        msg_rows = cap_per_dest
+        row_wire = words * 4
+        row_logical = sum(np.dtype(t[n].dtype).itemsize for n in t.names)
+        wire_tag = "wide"
 
     # received rows are front-packed within each per-sender block; expose them
     # through the deferred-compaction mask instead of paying a full sort here
@@ -185,11 +249,16 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
         jnp.repeat(recv_counts, cap_per_dest)
     out = Table(cols, recv_counts.sum().astype(jnp.int32), valid)
 
+    msg = msg_rows * words * 4 + (4 if not packed else 0)  # + metadata ints
     stats = ExchangeStats(
         kind="shuffle", participants=N,
-        message_bytes=cap_per_dest * words * 4,
-        total_bytes=N * cap_per_dest * words * 4,
-        collectives=n_coll + 1,  # +1 metadata round
+        message_bytes=msg,
+        total_bytes=N * msg,
+        collectives=n_coll,
+        logical_bytes=cap_per_dest * row_logical,
+        row_wire_bytes=row_wire,
+        row_logical_bytes=row_logical,
+        wire=wire_tag,
     )
     return out, overflow, recv_counts, stats
 
@@ -207,23 +276,35 @@ def _unbitcast(part: jax.Array, dt) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def broadcast_table(t: Table, axis_name: str, num_partitions: int,
-                    packed: bool = True) -> tuple[Table, ExchangeStats]:
+                    packed: bool = True, wire: Mapping | None = None,
+                    narrow: bool | None = None,
+                    ) -> tuple[Table, jax.Array, ExchangeStats]:
     """Replicate a distributed table on every device (paper Fig. 3).
 
     all_gather == the ring broadcast of Eq. 1 on the ICI torus: every device
-    streams its shard around the ring; N-1 hops of S/N bytes each.
+    streams its shard around the ring; N-1 hops of S/N bytes each.  Returns
+    (table, overflow, stats); in packed mode the per-shard row count rides as
+    a header row of the gathered buffer (ONE collective), and ``overflow``
+    reports narrowed-lane range violations (always False when wide).
     """
     # the gathered payload is reconstructed from per-shard counts alone, so the
     # payload must be front-compacted — this is a true contiguity boundary
     t = ensure_compact(t)
     N, cap = num_partitions, t.capacity
-    counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
+    overflow = jnp.asarray(False)
     if packed:
-        buf, spec = pack_columns(t)
-        recv = jax.lax.all_gather(buf, axis_name, tiled=True)
-        cols = unpack_columns(recv, spec)
-        n_coll, words = 1, buf.shape[1]
+        buf, fmt, overflow = pack_columns(t, wire=wire, narrow=narrow)
+        hdr = jnp.zeros((1, fmt.words), jnp.int32) \
+            .at[0, 0].set(t.count.astype(jnp.int32))
+        recv = jax.lax.all_gather(jnp.concatenate([hdr, buf]), axis_name,
+                                  tiled=True).reshape(N, cap + 1, fmt.words)
+        counts = recv[:, 0, 0]
+        cols = unpack_columns(recv[:, 1:, :].reshape(N * cap, fmt.words), fmt)
+        n_coll, words, msg_rows = 1, fmt.words, cap + 1
+        row_wire, row_logical = fmt.row_wire_bytes, fmt.row_logical_bytes
+        wire_tag = "narrow" if fmt.narrow else "wide"
     else:
+        counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
         cols, words = {}, 0
         for name in t.names:
             v = t[name]
@@ -235,15 +316,23 @@ def broadcast_table(t: Table, axis_name: str, num_partitions: int,
             got = jax.lax.all_gather(part, axis_name, tiled=True)
             cols[name] = _unbitcast(got, t[name].dtype)
             words += part.shape[1]
-        n_coll = len(t.names)
+        n_coll, msg_rows = len(t.names) + 1, cap
+        row_wire = words * 4
+        row_logical = sum(np.dtype(t[n].dtype).itemsize for n in t.names)
+        wire_tag = "wide"
 
     valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
     out = Table(cols, counts.sum().astype(jnp.int32), valid)
+    msg = msg_rows * words * 4 + (4 if not packed else 0)
     stats = ExchangeStats(kind="broadcast", participants=N,
-                          message_bytes=cap * words * 4,
-                          total_bytes=cap * words * 4 * (N - 1),
-                          collectives=n_coll + 1)
-    return out, stats
+                          message_bytes=msg,
+                          total_bytes=msg * (N - 1),
+                          collectives=n_coll,
+                          logical_bytes=cap * row_logical,
+                          row_wire_bytes=row_wire,
+                          row_logical_bytes=row_logical,
+                          wire=wire_tag)
+    return out, overflow, stats
 
 
 def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
@@ -251,13 +340,13 @@ def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
     """§7.1 baseline: emulate broadcast with N-1 p2p ring forwards of the FULL
     buffer — each shard transits every link once per hop instead of being
     pipelined, duplicating inter-node traffic exactly as the paper describes.
-    Shows up in HLO as N-1 collective-permutes of the full shard."""
+    Shows up in HLO as N-1 collective-permutes of the full shard.  Stays on
+    the WIDE wire format deliberately: it is the paper's unoptimized baseline."""
     t = ensure_compact(t)
     N, cap = num_partitions, t.capacity
-    buf, spec = pack_columns(t)
+    buf, fmt, _ = pack_columns(t, narrow=False)
     counts = jax.lax.all_gather(t.count.reshape(1), axis_name, tiled=True)
     parts = [buf]
-    cnt_parts = [t.count.reshape(1)]
     cur = buf
     perm = [(i, (i + 1) % N) for i in range(N)]
     for _ in range(N - 1):
@@ -269,13 +358,17 @@ def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,
     src = (me - jnp.arange(N)) % N
     order = jnp.zeros(N, jnp.int32).at[src].set(jnp.arange(N, dtype=jnp.int32))
     recv = recv[order].reshape(N * cap, -1)
-    cols = unpack_columns(recv, spec)
+    cols = unpack_columns(recv, fmt)
     valid = (jnp.arange(N * cap) % cap) < jnp.repeat(counts, cap)
     out = Table(cols, counts.sum().astype(jnp.int32), valid)
     stats = ExchangeStats(kind="broadcast_p2p", participants=N,
-                          message_bytes=cap * buf.shape[1] * 4,
-                          total_bytes=cap * buf.shape[1] * 4 * (N - 1),
-                          collectives=N)  # N-1 permutes + counts gather
+                          message_bytes=cap * fmt.words * 4 + 4,
+                          total_bytes=(cap * fmt.words * 4 + 4) * (N - 1),
+                          collectives=N,  # N-1 permutes + counts gather
+                          logical_bytes=cap * fmt.row_logical_bytes,
+                          row_wire_bytes=fmt.row_wire_bytes,
+                          row_logical_bytes=fmt.row_logical_bytes,
+                          wire="wide")
     return out, stats
 
 

@@ -23,7 +23,7 @@ __all__ = [
     "ClusterSpec", "CLUSTERS", "Hockney",
     "broadcast_throughput", "shuffle_throughput", "broadcast_beats_shuffle",
     "shuffle_time_skewed", "fit_hockney", "exchange_time",
-    "project_workload",
+    "exchange_time_from_stats", "wire_savings", "project_workload",
 ]
 
 
@@ -170,6 +170,36 @@ def exchange_time(kind: str, spec: ClusterSpec, v: int, total_bytes: float,
             return (n - 1) * per_dev / spec.bg
         return (n - 1) * per_dev / (spec.bn / spec.k)
     raise ValueError(kind)
+
+
+def exchange_time_from_stats(stats, spec: ClusterSpec, v: int = 1,
+                             n_devices: int | None = None,
+                             hockney_n: Hockney | None = None,
+                             hockney_g: Hockney | None = None) -> float:
+    """Predicted wall time of one logged exchange, from what ACTUALLY moves.
+
+    ``stats`` is an :class:`repro.core.exchange.ExchangeStats`: its
+    ``message_bytes`` are wire bytes — the packed words including the fused
+    counts header, at the narrow lane widths when the planner's statistics
+    narrowed the payload — so the Hockney model (§3.6) prices the compressed
+    message size, not the logical table size.  The narrow-vs-wide delta is
+    ``wire_savings(stats)``: the model's predicted benefit of shipping at
+    inferred bit widths.
+    """
+    n = n_devices or stats.participants
+    if stats.kind.startswith("broadcast") or stats.kind == "gather":
+        total = stats.message_bytes * n          # per-shard payload x N
+        return exchange_time("broadcast", spec, v, total, hockney_n, hockney_g)
+    total = stats.message_bytes * n * n          # p2p msg = S/N^2
+    return exchange_time("shuffle", spec, v, total, hockney_n, hockney_g)
+
+
+def wire_savings(stats) -> float:
+    """Fraction of logical payload bytes the wire format did NOT move
+    (0.0 = full width; e.g. 0.6 = 60% fewer bytes per row than dtype-true)."""
+    if stats.row_logical_bytes <= 0:
+        return 0.0
+    return max(0.0, 1.0 - stats.row_wire_bytes / stats.row_logical_bytes)
 
 
 def project_workload(spec: ClusterSpec, v_range, compute_v1: float,

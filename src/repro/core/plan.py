@@ -35,6 +35,13 @@ are planner inferences.  ``groups_hint=`` remains available for bounds the
 planner cannot prove (data-dependent group counts, e.g. Q13's orders-per-
 customer histogram); everything provable is inferred and the hand hint
 deleted.
+
+The same principle extends to the wire: ``Shuffle`` / ``Broadcast`` /
+exchanged ``GroupBy`` / ``Finalize`` nodes carry NO wire-format fields.  The
+planner derives per-column ``(lo, hi)`` payload bounds from the identical
+statistics pipeline (``PlanInfo.wire``) and the exchange layer ships each
+column at its inferred lane width (``core/wire.py``), range-checked at pack
+time — authors describe WHAT moves, the compiler decides HOW WIDE.
 """
 from __future__ import annotations
 

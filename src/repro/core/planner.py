@@ -68,7 +68,8 @@ from . import plan as P
 __all__ = [
     "ColStats", "PlanInfo", "CompiledQuery",
     "analyze", "column_stats", "compile_query", "invalidate_stats",
-    "planner_default", "static_plan_stats", "stats_override", "validate",
+    "planner_default", "static_plan_stats", "static_wire_stats",
+    "stats_override", "validate",
 ]
 
 REPL = "replicated"          # partitioning lattice: REPL | tuple(cols) | None
@@ -355,20 +356,237 @@ def static_plan_stats(root: P.Node) -> dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
+# static wire-byte derivation (dtype propagation over the IR, no execution)
+# ---------------------------------------------------------------------------
+
+def _expr_scalar_nodes_ordered(e: P.Expr) -> list:
+    """AggScalar nodes inside an expression, in EVALUATION order (the order
+    ``_Executor._eval`` resolves ScalarRefs) — unlike the unordered
+    :func:`_expr_scalar_nodes` walk used for reachability."""
+    out: list = []
+    if isinstance(e, P.ScalarRef):
+        out.append(e.node)
+    for ch in _expr_children(e):
+        out.extend(_expr_scalar_nodes_ordered(ch))
+    return out
+
+
+def _agg_dtype(op: str, operand) -> np.dtype:
+    """Aggregate output dtype, matching all three engines (count -> int64;
+    integer sums -> int64; float sums / min / max preserve the operand)."""
+    if op == "count":
+        return np.dtype(np.int64)
+    dt = np.result_type(operand)
+    if op == "sum":
+        return np.dtype(np.int64) if dt.kind in "biu" else dt
+    if op == "avg":
+        return np.dtype(np.float64)
+    return dt                                   # min / max
+
+
+def _expand_avg_static(aggs):
+    """avg -> (__name_s sum, __name_c count): the PARTIAL column set an
+    exchanged group-by actually moves (mirrors ``backend._expand_avg``)."""
+    out = []
+    for name, op, v in aggs:
+        if op == "avg":
+            out.append((f"__{name}_s", "sum", v))
+            out.append((f"__{name}_c", "count", None))
+        else:
+            out.append((name, op, v))
+    return out
+
+
+class _DtypeWalker:
+    """Column-dtype propagation over a plan DAG.
+
+    Mirrors the executors' value semantics at the type level only (numpy and
+    jnp promote identically for this engine's dtypes under x64), so the
+    static wire layout of every exchange payload can be derived from the IR
+    with no execution."""
+
+    def __init__(self, db):
+        self.db = db
+        self.memo: dict[int, dict[str, np.dtype]] = {}
+
+    # -- expressions: operand is an np.dtype or a host scalar (weak) --------
+    def _operand(self, e: P.Expr, sdt: dict):
+        if isinstance(e, P.Col):
+            return sdt[e.name]
+        if isinstance(e, P.Lit):
+            return e.value
+        if isinstance(e, P.CodeLit):
+            return self.db.code(e.col, e.value)
+        if isinstance(e, P.DbScale):
+            return self.db.scale
+        if isinstance(e, P.Cast):
+            return np.dtype(e.dtype)
+        if isinstance(e, P.ScalarRef):
+            for name, op, v in e.node.aggs:
+                if name == e.name:
+                    child_dt = self.dtypes(e.node.children[0])
+                    return _agg_dtype(op, self._operand_of_agg(v, child_dt))
+            raise KeyError(e.name)
+        if isinstance(e, P.BinOp):
+            if e.op in ("<", "<=", ">", ">=", "==", "!="):
+                return np.dtype(np.bool_)
+            a = self._operand(e.a, sdt)
+            b = self._operand(e.b, sdt)
+            # & | promote like the executors' generic bitwise ops: bool for
+            # bool operands (the filter-mask case), integer for integer ones
+            r = np.result_type(a, b)
+            if e.op == "/" and r.kind in "biu":
+                return np.dtype(np.float64)     # true division
+            return r
+        if isinstance(e, P.NotE):
+            return np.result_type(self._operand(e.a, sdt))
+        if isinstance(e, P.Where):
+            return np.result_type(self._operand(e.a, sdt),
+                                  self._operand(e.b, sdt))
+        if isinstance(e, (P.Year, P.AlphaRank)):
+            return np.dtype(np.int64)
+        if isinstance(e, (P.Like, P.StartsWith, P.EndsWith, P.InSet)):
+            return np.dtype(np.bool_)
+        raise TypeError(f"cannot type {type(e).__name__}")
+
+    def _operand_of_agg(self, v, sdt):
+        """Agg value spec: column name | expression | None (count)."""
+        if v is None:
+            return np.dtype(np.int64)
+        if isinstance(v, str):
+            return sdt[v]
+        return self._operand(v, sdt)
+
+    def expr_dtype(self, e: P.Expr, sdt: dict) -> np.dtype:
+        return np.result_type(self._operand(e, sdt))
+
+    # -- nodes --------------------------------------------------------------
+    def dtypes(self, n: P.Node) -> dict[str, np.dtype]:
+        got = self.memo.get(id(n))
+        if got is not None:
+            return got
+        if isinstance(n, P.Scan):
+            s = {c: np.dtype(v.dtype)
+                 for c, v in self.db.tables[n.table].items()}
+        elif isinstance(n, (P.Filter, P.Shuffle, P.Broadcast, P.Shrink)):
+            s = dict(self.dtypes(n.children[0]))
+        elif isinstance(n, P.Select):
+            ch = self.dtypes(n.children[0])
+            s = {c: ch[c] for c in n.names}
+        elif isinstance(n, P.WithCol):
+            s = dict(self.dtypes(n.children[0]))
+            for name, e in n.exprs.items():
+                s[name] = self.expr_dtype(e, s)
+        elif isinstance(n, P.Rename):
+            s = {n.mapping.get(c, c): v
+                 for c, v in self.dtypes(n.children[0]).items()}
+        elif isinstance(n, (P.Join, P.Left)):
+            s = dict(self.dtypes(n.probe))
+            bs = self.dtypes(n.build)
+            for c in n.take:
+                s[c] = bs[c]
+            if isinstance(n, P.Left):
+                s["__matched"] = np.dtype(np.bool_)
+        elif isinstance(n, (P.Semi, P.Anti)):
+            s = dict(self.dtypes(n.probe))
+        elif isinstance(n, P.GroupBy):
+            ch = self.dtypes(n.children[0])
+            s = {k: ch[k] for k in n.keys}
+            for name, op, v in n.aggs:
+                s[name] = _agg_dtype(op, self._operand_of_agg(v, ch))
+        else:           # Finalize / ScalarResult / AggScalar: not a table
+            s = {}
+        self.memo[id(n)] = s
+        return s
+
+    def payload(self, n: P.Node) -> dict[str, np.dtype]:
+        """Column dtypes of the payload an exchange node moves."""
+        if isinstance(n, P.GroupBy):
+            ch = self.dtypes(n.children[0])
+            s = {k: ch[k] for k in n.keys}
+            for name, op, v in _expand_avg_static(n.aggs):
+                s[name] = _agg_dtype(op, self._operand_of_agg(v, ch))
+            return s
+        return self.dtypes(n.children[0])
+
+
+def static_wire_stats(root: P.Node, db, narrow: bool = True,
+                      info: "PlanInfo | None" = None) -> list[dict]:
+    """Per-exchange wire descriptors derived from the IR alone — no execution.
+
+    Returns, in EXECUTION order (the order the backends log
+    ``ExchangeStats``), one entry per exchange:
+    ``{kind, row_wire_bytes, row_logical_bytes, wire}``.  These equal the
+    runtime stats on every backend (asserted in ``tests/test_wire.py``), so
+    wire-byte budgets are CI-gateable on CPU with no cluster
+    (``benchmarks/bench_exchange_bytes.py``).  Pass a cached ``info``
+    (``CompiledQuery.info``) to skip re-analysis; the wide leg needs no
+    bounds and never analyzes.
+    """
+    from . import wire as wi      # deferred: wire pulls in jax
+    if info is None and narrow:
+        info = analyze(root, db)
+    dtw = _DtypeWalker(db)
+    entries: list[dict] = []
+    seen: set[int] = set()
+
+    def emit(kind: str, n: P.Node, force_wide: bool = False):
+        dt = dtw.payload(n)
+        use_narrow = narrow and not force_wide
+        rw, rl = wi.row_bytes(sorted(dt), dt,
+                              bounds=info.wire_for(n) if use_narrow else None,
+                              narrow=use_narrow)
+        entries.append({"kind": kind, "row_wire_bytes": rw,
+                        "row_logical_bytes": rl,
+                        "wire": "narrow" if use_narrow else "wide"})
+
+    def visit(n: P.Node):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for ch in n.children:
+            visit(ch)
+        for e in _node_exprs(n):
+            for sub in _expr_scalar_nodes_ordered(e):
+                visit(sub)
+        if isinstance(n, P.Shuffle):
+            emit("shuffle", n)
+        elif isinstance(n, P.Broadcast):
+            emit("broadcast_p2p" if n.p2p else "broadcast", n,
+                 force_wide=n.p2p)          # §7.1 baseline stays wide
+        elif isinstance(n, P.GroupBy) and n.exchange != "local":
+            emit("shuffle" if n.exchange == "shuffle"
+                 else ("gather" if n.final else "broadcast"), n)
+        elif isinstance(n, P.Finalize) and not n.replicated:
+            emit("gather", n)
+
+    visit(root)
+    return entries
+
+
+# ---------------------------------------------------------------------------
 # analysis: schemas, hints, derived placement
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class PlanInfo:
     """Result of :func:`analyze`: per-group-by inferred hints, the derived
-    partitioning per node, validation notes, and static exchange counts."""
+    partitioning per node, per-exchange wire bounds, validation notes, and
+    static exchange counts."""
     group_hints: dict[int, tuple[tuple[int, ...] | None, int | None]]
     parts: dict[int, Any]
     notes: list[str]
     counts: dict[str, int]
+    # per exchange-performing node: {column: (lo, hi)} provable value bounds
+    # of the payload — the statistics the narrow wire format is derived from
+    wire: dict[int, dict[str, tuple[int, int]]] = \
+        dataclasses.field(default_factory=dict)
 
     def hints_for(self, node: P.GroupBy):
         return self.group_hints.get(id(node), (None, None))
+
+    def wire_for(self, node: P.Node):
+        return self.wire.get(id(node))
 
 
 def _partition_keys() -> dict:
@@ -593,7 +811,28 @@ def analyze(root: P.Node, db) -> PlanInfo:
             gh = n.groups_hint if gh is None else min(gh, n.groups_hint)
         hints[id(n)] = (key_bits, gh)
 
-    return PlanInfo(hints, parts, notes, static_plan_stats(root))
+    # -- wire bounds per exchange payload ----------------------------------
+    # The narrow wire format ships each exchanged column at the lane width
+    # its provable (lo, hi) bounds allow — the SAME statistics key_bits came
+    # from, now applied to every exchanged column instead of group keys only.
+    # The engine range-checks every claim at pack time (ctx.overflow on a
+    # lie), mirroring key_bits' runtime-check contract.
+    def _payload_bounds(schema_map) -> dict[str, tuple[int, int]]:
+        return {c: (s.lo, s.hi) for c, s in schema_map.items()
+                if s.lo is not None and s.hi is not None}
+
+    wire: dict[int, dict[str, tuple[int, int]]] = {}
+    for n in nodes:
+        if isinstance(n, (P.Shuffle, P.Broadcast)):
+            wire[id(n)] = _payload_bounds(schema(n.children[0]))
+        elif isinstance(n, P.Finalize) and not n.replicated:
+            wire[id(n)] = _payload_bounds(schema(n.children[0]))
+        elif isinstance(n, P.GroupBy) and n.exchange != "local":
+            # the exchange moves the PARTIAL aggregate: keys + agg columns
+            # (avg's sum/count temporaries are unbounded and ship full-width)
+            wire[id(n)] = _payload_bounds(schema(n))
+
+    return PlanInfo(hints, parts, notes, static_plan_stats(root), wire)
 
 
 def validate(root: P.Node, db) -> list[str]:
@@ -617,6 +856,11 @@ class _Executor:
 
     def run(self, node: P.Node):
         return self._exec(node)
+
+    def _wire(self, node: P.Node):
+        """Inferred payload bounds for an exchange node (None = no inference
+        -> the engine ships full-width)."""
+        return self.info.wire_for(node) if self.info is not None else None
 
     # -- expressions -------------------------------------------------------
     def _eval(self, e: P.Expr, t):
@@ -719,21 +963,25 @@ class _Executor:
             return ctx.group_by(t, list(node.keys), self._aggs(node.aggs),
                                 exchange=node.exchange, final=node.final,
                                 groups_hint=gh,
-                                key_bits=list(key_bits) if key_bits else None)
+                                key_bits=list(key_bits) if key_bits else None,
+                                wire=self._wire(node))
         if isinstance(node, P.AggScalar):
             t = self._exec(node.children[0])
             return ctx.agg_scalar(t, self._aggs(node.aggs))
         if isinstance(node, P.Shuffle):
-            return ctx.shuffle(self._exec(node.children[0]), node.key)
+            return ctx.shuffle(self._exec(node.children[0]), node.key,
+                               wire=self._wire(node))
         if isinstance(node, P.Broadcast):
-            return ctx.broadcast(self._exec(node.children[0]), p2p=node.p2p)
+            return ctx.broadcast(self._exec(node.children[0]), p2p=node.p2p,
+                                 wire=self._wire(node))
         if isinstance(node, P.Shrink):
             return ctx.shrink(self._exec(node.children[0]), node.cap)
         if isinstance(node, P.Finalize):
             return ctx.finalize(
                 self._exec(node.children[0]),
                 sort_keys=list(node.sort_keys) if node.sort_keys else None,
-                limit=node.limit, replicated=node.replicated)
+                limit=node.limit, replicated=node.replicated,
+                wire=self._wire(node))
         if isinstance(node, P.ScalarResult):
             return {k: self._eval(e, None) for k, e in node.exprs.items()}
         raise TypeError(f"cannot execute {type(node).__name__}")
@@ -810,6 +1058,12 @@ class CompiledQuery:
 
     def static_counts(self) -> dict[str, int]:
         return static_plan_stats(self.plan)
+
+    def static_wire(self, db, narrow: bool = True) -> list[dict]:
+        """Per-exchange wire-byte descriptors from the IR (no execution);
+        reuses the per-database PlanInfo cache."""
+        return static_wire_stats(self.plan, db, narrow=narrow,
+                                 info=self.info(db) if narrow else None)
 
     def validate(self, db) -> list[str]:
         return self.info(db).notes

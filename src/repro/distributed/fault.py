@@ -44,7 +44,7 @@ class QueryRunner:
     def __init__(self, db, mesh, axis: str = "data",
                  capacity_factor: float = 2.0, max_attempts: int = 4,
                  escalation: float = 2.0, packed_exchange: bool = True,
-                 join_method: str = "sorted"):
+                 join_method: str = "sorted", wire_format: str | None = None):
         self.db = db
         self.mesh = mesh
         self.axis = axis
@@ -53,6 +53,7 @@ class QueryRunner:
         self.escalation = escalation
         self.packed = packed_exchange
         self.join_method = join_method
+        self.wire_format = wire_format
 
     def run(self, query_fn) -> RunResult:
         factor = self.capacity_factor
@@ -64,7 +65,8 @@ class QueryRunner:
                 result, stats, overflow = B.run_distributed(
                     fn, self.db, self.mesh, self.axis,
                     capacity_factor=factor, packed_exchange=self.packed,
-                    join_method=self.join_method)
+                    join_method=self.join_method,
+                    wire_format=self.wire_format)
             except Exception as exc:   # node failure -> re-execute
                 last_exc = exc
                 continue
@@ -75,9 +77,11 @@ class QueryRunner:
             if attempt >= 2 and hasattr(query_fn, "with_inference"):
                 # capacity escalation cannot fix a groups_hint that undercounts
                 # the true distinct groups (a plan-author claim like Q13's, or
-                # hints analyzed against stand-in metadata): after one failed
+                # hints analyzed against stand-in metadata) NOR a lying wire
+                # bound tripping the narrow-lane range check: after one failed
                 # escalation, recompile the plan with no hints at all — the
-                # conservative program has no hint-induced overflow left
+                # conservative program has no hint-induced overflow left and,
+                # with no bounds, every exchange ships at full width
                 fn = query_fn.with_inference(False)
         if last_exc is not None:
             raise last_exc

@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def murmur32(k: jax.Array) -> jax.Array:
@@ -75,3 +76,72 @@ def radix_hist_pallas(keys: jax.Array, parts: int, width: int | None = None,
         out_shape=jax.ShapeDtypeStruct((n // blk, width), jnp.float32),
         interpret=interpret,
     )(keys.reshape(n, 1).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# fused counting rank: histogram + intra-block exclusive rank in ONE kernel
+# ---------------------------------------------------------------------------
+
+def _rank_kernel(key_ref, slot_ref, hist_ref, run_ref, *, blk: int,
+                 width: int, parts: int):
+    """One grid step = one row block, executed SEQUENTIALLY (TPU grid order):
+
+      1. one-hot the block's bins (hashed=False binning: keys are ids);
+      2. exclusive intra-block rank per key via a strictly-lower-triangular
+         ones matmul on the MXU (row i's rank = earlier same-key rows);
+      3. add the running per-key total carried in VMEM scratch across blocks
+         (the prefix sum the jnp oracle computes as a separate pass);
+      4. extract each row's own rank through the one-hot (lane reduce).
+
+    All counts stay <= blk per block so the f32 matmul is exact; the running
+    total is carried in int32, so ranks are exact for any n < 2^31 — exactly
+    the oracle's contract.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        run_ref[...] = jnp.zeros_like(run_ref)
+
+    pid = _bin(key_ref[...], parts, False)                     # (blk, 1)
+    iota_w = jax.lax.broadcasted_iota(jnp.int32, (blk, width), 1)
+    onehot = (pid == iota_w).astype(jnp.float32)               # (blk, W)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    lower = (cols < rows).astype(jnp.float32)                  # strict lower
+    excl = jax.lax.dot_general(lower, onehot,
+                               dimension_numbers=(((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    rank = run_ref[0:1, :] + excl.astype(jnp.int32)            # (blk, W)
+    sel = jnp.where(pid == iota_w, rank, 0)
+    slot_ref[...] = jnp.sum(sel, axis=1, keepdims=True,
+                            dtype=jnp.int32)                   # (blk, 1)
+    bh = jnp.sum(onehot, axis=0, keepdims=True)                # (1, W)
+    hist_ref[...] = bh
+    run_ref[0:1, :] = run_ref[0:1, :] + bh.astype(jnp.int32)
+
+
+def counting_rank_pallas(keys: jax.Array, parts: int, width: int,
+                         blk: int = 512, interpret: bool = False,
+                         ) -> tuple[jax.Array, jax.Array]:
+    """keys (n,) int32 ids in [0, parts) -> (slot (n,) int32, hist (n//blk,
+    width) f32): the whole shuffle-dispatch rank on-chip in one pass.
+
+    ``blk`` bounds the (blk, blk) triangular tile (512 -> 1 MB VMEM); the
+    rank produced is independent of the block size.
+    """
+    n = keys.shape[0]
+    assert n % blk == 0 and width >= parts
+    grid = (n // blk,)
+    slot, hist = pl.pallas_call(
+        functools.partial(_rank_kernel, blk=blk, width=width, parts=parts),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, width), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((n // blk, width), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((8, width), jnp.int32)],
+        interpret=interpret,
+    )(keys.reshape(n, 1).astype(jnp.int32))
+    return slot[:, 0], hist

@@ -7,7 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import _bin, radix_hist_pallas
+from .kernel import _bin, counting_rank_pallas, radix_hist_pallas
 from .ref import radix_hist_ref
 from repro.kernels import auto_interpret
 
@@ -59,32 +59,42 @@ def counting_rank(keys: jax.Array, parts: int, blk: int = 2048,
     keys (n,) int in [0, parts) -> (slot, counts) where ``slot[i]`` is row
     i's 0-based rank among earlier rows with the same key (exactly the
     position a stable sort on key would assign within its key group) and
-    ``counts[p]`` the total rows with key p.  Three passes, no sort:
+    ``counts[p]`` the total rows with key p.  No sort either way:
 
-      1. per-block histograms (the radix_hist MXU kernel, ``hashed=False``);
-      2. exclusive prefix sum over blocks per key -> block base offsets;
-      3. per-row offset: intra-block exclusive one-hot cumsum + base,
-         streamed block by block (``lax.map``) so the peak intermediate is
-         O(blk * parts), not O(n * parts).
+      * **kernel leg** (``use_kernel=True``): ONE fused Pallas pass
+        (``counting_rank_pallas``) — per-block one-hot histogram, exclusive
+        intra-block rank via a strictly-lower-triangular MXU matmul, and the
+        cross-block prefix carried in on-chip scratch across the sequential
+        grid — the whole dispatch rank stays on-chip, nothing returns to
+        host jnp between passes.
+      * **oracle leg** (``use_kernel=False``): the differential jnp
+        reference — per-block histograms, exclusive prefix sum over blocks,
+        then a block-streamed one-hot cumsum (``lax.map``) so the peak
+        intermediate is O(blk * parts), not O(n * parts).
 
-    Padding rows go to a reserved bin (``parts``).  Per-block kernel counts
-    (<= blk, f32-exact) are cast to int32 before any prefix arithmetic, so
-    ranks are exact for any n < 2^31 — matching the argsort this replaces.
+    Padding rows go to a reserved bin (``parts``).  Per-block counts are <=
+    blk (f32-exact); all cross-block arithmetic is int32, so ranks are exact
+    for any n < 2^31 — matching the argsort this replaces.  The rank is
+    independent of ``blk``, so the two legs are byte-identical.
     """
     if interpret is None:
         interpret = auto_interpret()
     n = keys.shape[0]
     width = parts + 1                          # + reserved padding bin
     wpad = max(_LANES, (width + _LANES - 1) // _LANES * _LANES)
+    if use_kernel:
+        blk = min(blk, 512)                    # (blk, blk) triangular tile
     blk = min(blk, max(8, (n + 7) // 8 * 8))
     npad = (n + blk - 1) // blk * blk
     k2 = jnp.concatenate([keys.astype(jnp.int32),
                           jnp.full((npad - n,), parts, jnp.int32)])
     if use_kernel:
-        hist = radix_hist_pallas(k2, width, width=wpad, blk=blk,
-                                 interpret=interpret, hashed=False)[:, :width]
-    else:
-        hist = radix_hist_ref(k2, width, blk, hashed=False)
+        slot, histf = counting_rank_pallas(k2, width, width=wpad, blk=blk,
+                                           interpret=interpret)
+        counts = histf[:, :width].astype(jnp.int32).sum(axis=0)[:parts]
+        return slot[:n], counts
+
+    hist = radix_hist_ref(k2, width, blk, hashed=False)
     hist = hist.astype(jnp.int32)              # exact: per-block counts <= blk
     nb = npad // blk
     base = jnp.concatenate([jnp.zeros((1, width), jnp.int32),

@@ -139,17 +139,15 @@ def dryrun_query(qid: int, db, mesh, capacity_factor=1.02,
         mod["flops"], mod["traffic_bytes"],
         sum(mod["collective_bytes"].values()), n)
     # paper-model cross-check: predicted exchange time for the plan's
-    # logged exchange volumes on the v5e cluster spec
+    # logged exchange volumes on the v5e cluster spec.  message_bytes are
+    # WIRE bytes (stats-narrowed lanes + fused counts header), so the model
+    # prices what actually crosses the interconnect; wire_savings records
+    # the per-exchange compression the narrow format bought.
     spec = pm.CLUSTERS["tpu_v5e"]
-    t_model = 0.0
-    for e in stats.log:
-        if e.kind.startswith("broadcast") or e.kind == "gather":
-            table_bytes = e.message_bytes * n        # per-shard payload x N
-            t_model += pm.exchange_time("broadcast", spec, 1, table_bytes)
-        else:
-            table_bytes = e.message_bytes * n * n    # p2p msg = S/N^2
-            t_model += pm.exchange_time("shuffle", spec, 1, table_bytes)
+    t_model = sum(pm.exchange_time_from_stats(e, spec, n_devices=n)
+                  for e in stats.log)
     rec["model_exchange_s"] = t_model
+    rec["wire_savings"] = [round(pm.wire_savings(e), 3) for e in stats.log]
     return rec
 
 

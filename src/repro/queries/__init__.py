@@ -44,6 +44,12 @@ shrinks partials before an exchange).  Plans NO LONGER state them:
     widths per database: the same plan uses direct addressing at scale
     factors where the key domain proves small and degrades to the single-sort
     path where it does not.
+  * **Wire widths are inferred too**: every exchange (broadcast / shuffle /
+    exchanged group-by / final gather) ships its payload at the lane widths
+    the same column statistics prove (``core/wire.py``), with a per-column
+    runtime range check feeding ``ctx.overflow``.  Plans carry no wire
+    fields; ``REPRO_WIRE=wide`` forces the legacy full-width format (the
+    differential leg) and unhinted compilation is wide by construction.
 
 ``REPRO_PLANNER=0`` disables all hints (the conservative leg CI runs to pin
 that hinted and unhinted compilation agree — byte-identical per aggregation

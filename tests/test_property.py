@@ -54,11 +54,15 @@ def test_filter_compact_invariant(cols, thresh):
 @settings(max_examples=25, deadline=None)
 @given(tables())
 def test_pack_unpack_roundtrip(cols):
-    """Column packing for the fused exchange is lossless for every dtype."""
+    """Column packing for the fused exchange is lossless for every dtype.
+
+    Wide format: every row round-trips verbatim with a statically-False
+    overflow flag (narrow-format properties live in tests/test_wire.py)."""
     t = from_numpy(cols, capacity=max(8, len(cols["k"])))
-    buf, spec = pack_columns(t)
+    buf, fmt, overflow = pack_columns(t, narrow=False)
     assert buf.dtype == jnp.int32
-    back = unpack_columns(buf, spec)
+    assert not bool(overflow)
+    back = unpack_columns(buf, fmt)
     for name in t.names:
         np.testing.assert_array_equal(np.asarray(back[name]),
                                       np.asarray(t[name]))
