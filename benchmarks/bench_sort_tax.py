@@ -41,26 +41,30 @@ from repro.queries import PLANS, QUERIES
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(ROOT, "BENCH_sort_tax.json")
 
-BENCH_QUERIES = (1, 3, 6, 9, 12)
+BENCH_QUERIES = (1, 3, 6, 9, 12, 13)
 
 # Seed-engine numbers, measured at sf=0.01 seed=7 on the pre-optimization
 # commit (eager compaction, per-key sort passes, per-join build sorts) with
 # the same best-of-9 protocol used below.  q6/q12 were added for phase 2 and
 # have no true seed measurement; their baseline is the phase-1 engine
-# (PR 1: deferred compaction + single-sort operators + build cache).
+# (PR 1: deferred compaction + single-sort operators + build cache).  q13 was
+# added for the hash-compaction path: its baseline is the phase-3 engine,
+# where the data-dependent c_count group-by still paid the single-sort path.
 SEED_BASELINE = {
     "q1": {"sort_ops": 4, "wall_ms": 81.3},
     "q3": {"sort_ops": 10, "wall_ms": 140.0},
     "q9": {"sort_ops": 12, "wall_ms": 142.0},
     "q6": {"sort_ops": 1, "wall_ms": 19.5, "phase1": True},
     "q12": {"sort_ops": 3, "wall_ms": 35.1, "phase1": True},
+    "q13": {"sort_ops": 3, "wall_ms": 8.4, "phase1": True},
 }
 
 MIN_SORT_DROP = 0.40
 
-# Phase-2 absolute budgets (hinted group-bys sortless, dispatch sortless);
+# Phase-2 absolute budgets (hinted group-bys sortless, dispatch sortless;
+# q13's group-by stage sortless via the hash-compaction dictionary);
 # keep in sync with tests/test_sort_tax.py::_MAX_SORTS.
-MAX_SORT_OPS = {"q1": 1, "q3": 4, "q6": 0, "q9": 5, "q12": 2}
+MAX_SORT_OPS = {"q1": 1, "q3": 4, "q6": 0, "q9": 5, "q12": 2, "q13": 2}
 
 
 def _plan_times(db, qid: int, iters: int = 9) -> tuple[float, float]:

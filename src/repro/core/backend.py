@@ -281,8 +281,9 @@ class RefContext(_BaseContext):
                              self._key(build, build_on), take, defaults)
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None, wire=None):
-        # key_bits is a JAX-engine planning hint; the oracle ignores it
+                 groups_hint=None, key_bits=None, wire=None, method="auto"):
+        # key_bits / method are JAX-engine planning hints; the oracle ignores
+        # them (np.unique-based group-by regardless of path)
         aggs, avg_post = _expand_avg(list(aggs))
         out = ref.group_aggregate(t, keys, _eval_aggs(self, t, aggs))
         # the exchange (were this distributed) moves the expanded partial —
@@ -420,10 +421,16 @@ class LocalContext(_BaseContext):
                              index=self._build_index(build, build_on))
 
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None, wire=None):
+                 groups_hint=None, key_bits=None, wire=None, method="auto"):
+        """``method`` selects the aggregation path (planner rule: ``hash``
+        when ``groups_hint`` is claimed but ``key_bits`` is unprovable);
+        the dictionary capacity scales with the runner's capacity factor so
+        escalation genuinely enlarges it on re-execution."""
         aggs, avg_post = _expand_avg(list(aggs))
         out, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
-                                      key_bits=key_bits,
+                                      key_bits=key_bits, method=method,
+                                      groups_hint=groups_hint,
+                                      hash_factor=self.capacity_factor,
                                       use_kernel=self.use_kernel,
                                       return_overflow=True)
         self.overflow = self.overflow | ov
@@ -531,18 +538,24 @@ class DistContext(LocalContext):
 
     # -- distributed aggregation --------------------------------------------
     def group_by(self, t, keys, aggs, exchange="local", final=False,
-                 groups_hint=None, key_bits=None, wire=None):
+                 groups_hint=None, key_bits=None, wire=None, method="auto"):
         """groups_hint: static bound on distinct groups (e.g. a dictionary
         domain) — shrinks the partial aggregate BEFORE the exchange, so a
         gather/shuffle of a wide scan's partial moves O(groups), not
         O(scan capacity).  Overflow feeds the re-execution runner.
         key_bits: provable per-column key bit widths — both the per-device
         partial and the post-exchange merge run the sortless direct path.
+        method: aggregation path; ``hash`` (groups_hint claimed, key_bits
+        unprovable — the Q13 shape) builds a per-device dictionary sized by
+        the capacity factor, and the SAME method runs the post-exchange
+        merge, so both sides of the exchange stay sortless.
         wire: provable (lo, hi) bounds per partial column — the exchange
         ships the partial at its inferred lane widths."""
         aggs, avg_post = _expand_avg(list(aggs))
         partial, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
-                                          key_bits=key_bits,
+                                          key_bits=key_bits, method=method,
+                                          groups_hint=groups_hint,
+                                          hash_factor=self.capacity_factor,
                                           use_kernel=self.use_kernel,
                                           return_overflow=True)
         self.overflow = self.overflow | ov
@@ -578,10 +591,13 @@ class DistContext(LocalContext):
                 self.stats.log.append(dataclasses.replace(stats, kind=kind))
             else:
                 raise ValueError(exchange)
-            # the partial->global merge reuses the same provable widths, so a
-            # hinted group-by is sortless on BOTH sides of the exchange
+            # the partial->global merge reuses the same provable widths (or
+            # the same dictionary bound), so a hinted group-by is sortless on
+            # BOTH sides of the exchange
             out, ov = rel.group_aggregate(moved, keys, merge,
-                                          key_bits=key_bits,
+                                          key_bits=key_bits, method=method,
+                                          groups_hint=groups_hint,
+                                          hash_factor=self.capacity_factor,
                                           use_kernel=self.use_kernel,
                                           return_overflow=True)
             self.overflow = self.overflow | ov

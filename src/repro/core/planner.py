@@ -28,6 +28,16 @@ from the plan by bound propagation:
     becomes ``groups_hint``.  A plan-author ``groups_hint=`` survives only
     where inference cannot prove a bound (or is tighter, matching the legacy
     overflow-retry semantics).
+  * **Method selection.** When ``key_bits`` is UNPROVABLE but a
+    ``groups_hint`` exists (Q13's data-dependent orders-per-customer bound is
+    the canonical case), the planner selects the **hash-compaction** path:
+    a trace-time on-device dictionary (``kernels/hash_group``) maps rows to
+    dense group ids, keeping the group-by sortless with no width claim at
+    all.  The dictionary re-checks the claim at runtime — an unplaceable row
+    or an undercounting bound raises the overflow flag, and the fault
+    runner's capacity escalation scales the dictionary (then drops hints
+    entirely, falling back to the single-sort path, if escalation cannot
+    help).
 
 Everything inferred is *provable from the database that runs*, so a lying
 bound is impossible on the data it was derived from.  A compile whose tables
@@ -581,9 +591,18 @@ class PlanInfo:
     # of the payload — the statistics the narrow wire format is derived from
     wire: dict[int, dict[str, tuple[int, int]]] = \
         dataclasses.field(default_factory=dict)
+    # per group-by: explicit aggregation method, or None for the engine's
+    # own direct/sort auto-dispatch.  The one rule today: "hash" when a
+    # groups_hint exists (author-claimed or inferred) but key_bits is
+    # unprovable — the data-dependent-domain shape (Q13) the direct path
+    # cannot take, extended to zero sorts by the trace-time dictionary.
+    methods: dict[int, str] = dataclasses.field(default_factory=dict)
 
     def hints_for(self, node: P.GroupBy):
         return self.group_hints.get(id(node), (None, None))
+
+    def method_for(self, node: P.GroupBy) -> str | None:
+        return self.methods.get(id(node))
 
     def wire_for(self, node: P.Node):
         return self.wire.get(id(node))
@@ -789,7 +808,9 @@ def analyze(root: P.Node, db) -> PlanInfo:
     # withheld and multi-column sorted group-bys keep the legacy
     # collision-safe 32-bit-shift packing.
     direct_max = _direct_bits_max()
+    hash_max = _hash_groups_max()
     hints: dict[int, tuple] = {}
+    methods: dict[int, str] = {}
     for n in nodes:
         if not isinstance(n, P.GroupBy):
             continue
@@ -810,6 +831,15 @@ def analyze(root: P.Node, db) -> PlanInfo:
         if n.groups_hint is not None:
             gh = n.groups_hint if gh is None else min(gh, n.groups_hint)
         hints[id(n)] = (key_bits, gh)
+        # the hash-compaction rule: a group bound exists (typically a plan-
+        # author claim like Q13's orders-per-customer histogram) but the key
+        # domain is unprovable — the direct path is out, yet a trace-time
+        # dictionary of groups_hint keys keeps the group-by sortless.  The
+        # engine re-checks at runtime: an unplaceable row or an undercounting
+        # bound raises ctx.overflow, never a silent merge/drop.
+        if key_bits is None and gh is not None and gh <= hash_max and \
+                1 <= len(n.keys) <= 2:
+            methods[id(n)] = "hash"
 
     # -- wire bounds per exchange payload ----------------------------------
     # The narrow wire format ships each exchanged column at the lane width
@@ -832,7 +862,8 @@ def analyze(root: P.Node, db) -> PlanInfo:
             # (avg's sum/count temporaries are unbounded and ship full-width)
             wire[id(n)] = _payload_bounds(schema(n))
 
-    return PlanInfo(hints, parts, notes, static_plan_stats(root), wire)
+    return PlanInfo(hints, parts, notes, static_plan_stats(root), wire,
+                    methods)
 
 
 def validate(root: P.Node, db) -> list[str]:
@@ -958,13 +989,15 @@ class _Executor:
             t = self._exec(node.children[0])
             if self.info is not None:
                 key_bits, gh = self.info.hints_for(node)
+                method = self.info.method_for(node) or "auto"
             else:
-                key_bits, gh = None, None   # conservative: no hints at all
+                # conservative: no hints at all (and hence the sort path)
+                key_bits, gh, method = None, None, "auto"
             return ctx.group_by(t, list(node.keys), self._aggs(node.aggs),
                                 exchange=node.exchange, final=node.final,
                                 groups_hint=gh,
                                 key_bits=list(key_bits) if key_bits else None,
-                                wire=self._wire(node))
+                                wire=self._wire(node), method=method)
         if isinstance(node, P.AggScalar):
             t = self._exec(node.children[0])
             return ctx.agg_scalar(t, self._aggs(node.aggs))
@@ -1074,8 +1107,12 @@ class CompiledQuery:
         for n in walk(self.plan):
             if isinstance(n, P.GroupBy):
                 kb, gh = info.hints_for(n)
-                path = "direct (sortless)" if kb is not None \
-                    else "single-sort"
+                if kb is not None:
+                    path = "direct (sortless)"
+                elif info.method_for(n) == "hash":
+                    path = "hash (sortless dictionary)"
+                else:
+                    path = "single-sort"
                 lines.append(
                     f"  group_by{list(n.keys)} exchange={n.exchange}: "
                     f"key_bits={list(kb) if kb else None} "
@@ -1088,6 +1125,11 @@ class CompiledQuery:
 def _direct_bits_max() -> int:
     from . import relational as rel     # deferred: relational pulls in jax
     return rel.DIRECT_AGG_BITS_MAX
+
+
+def _hash_groups_max() -> int:
+    from . import relational as rel     # deferred: relational pulls in jax
+    return rel.HASH_AGG_GROUPS_MAX
 
 
 class _PinnedQuery:

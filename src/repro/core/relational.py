@@ -31,8 +31,10 @@ Sort-count budget per operator (HLO ``sort`` ops; enforced by
   join_unique / left_join        0 probe-side + 1 per *distinct* build index
   group_aggregate                0 with provable ``key_bits`` (packed domain
                                  <= 2^13: direct addressing via the segsum
-                                 one-hot kernel) or no key columns (scalar
-                                 aggregation); 1 otherwise
+                                 one-hot kernel), 0 with a claimed
+                                 ``groups_hint`` (trace-time hash-compaction
+                                 dictionary, ``kernels/hash_group``) or no
+                                 key columns (scalar aggregation); 1 otherwise
   sort_by                        1 (any number of keys)
   shuffle (exchange)             0 (radix-hist counting rank), output masked
   compact / ensure_compact       1, boundaries only
@@ -56,6 +58,7 @@ import numpy as np
 from .table import Table, KEY_SENTINEL
 # imported at module scope (not lazily inside traced code): the kernel modules
 # materialize constants at import time, which must not happen under a trace
+from repro.kernels.hash_group import ops as _hg_ops
 from repro.kernels.hash_probe import ops as _hp_ops
 from repro.kernels.segsum import ops as _ss_ops
 
@@ -64,6 +67,11 @@ from repro.kernels.segsum import ops as _ss_ops
 # 64 lane-tiles) is the practical MXU ceiling; larger domains fall back to
 # the single-sort path.
 DIRECT_AGG_BITS_MAX = 13
+# Largest claimed group bound the hash-compaction path will take on: the
+# dictionary is sized groups_hint * capacity_factor (<= 8192 slots at the
+# default factor), keeping both the dictionary planes and the segsum one-hot
+# tiles inside the same VMEM ceiling as the direct path.
+HASH_AGG_GROUPS_MAX = 4096
 # Which engine backs the sortless reductions (segsum / radix_hist):
 #   REPRO_AGG_KERNEL=auto (default) — Pallas kernels on TPU, jnp
 #     scatter-reduce everywhere else.  Interpret-mode Pallas is a correctness
@@ -356,30 +364,48 @@ def group_aggregate(t: Table, key_cols: Sequence[str],
                     aggs: Sequence[tuple[str, str, jax.Array | str | None]],
                     key_bits: Sequence[int] | None = None,
                     method: str = "auto", use_kernel: bool | None = None,
-                    return_overflow: bool = False):
-    """Grouped aggregation; sortless when the key domain is provably small.
+                    return_overflow: bool = False,
+                    groups_hint: int | None = None,
+                    hash_factor: float = 2.0):
+    """Grouped aggregation; sortless when the key domain is provably small
+    OR a distinct-group bound is claimed.
 
-    Two execution paths, selected by ``method``:
+    Three execution paths, selected by ``method``:
 
       * ``"direct"`` — direct addressing: the packed key IS the dense group
         id (domain ``2^sum(key_bits)``, which must be <= 2^13), aggregates
         run through the ``kernels/segsum`` one-hot MXU reduce, and the dense
         slots compact to the front via a cumsum rank — ZERO sorts.  Scalar
         aggregation (no key columns) is the trivial domain-1 case.
+      * ``"hash"`` — hash compaction for *data-dependent* domains: a
+        trace-time on-device dictionary (``kernels/hash_group``,
+        insert-or-lookup over two-plane 64-bit keys) of
+        ``groups_hint * hash_factor`` slots maps each row to its slot, slots
+        rank to ascending-key dense group ids by a sort-free O(cap^2)
+        compare over the SMALL dictionary, and aggregates ride the same
+        segsum one-hot reduce — ZERO sorts with no ``key_bits`` at all.
+        Needs 1-2 key columns (the legacy collision-safe packing) and
+        ``groups_hint <= HASH_AGG_GROUPS_MAX``; any int64 key values work,
+        negatives included.
       * ``"sort"`` — the phase-1 engine: exactly ONE stable argsort whose
         order is reused for every aggregate (segment reductions).
-      * ``"auto"`` (default) — direct when eligible, sort otherwise.
+      * ``"auto"`` (default) — direct when eligible, else hash when eligible,
+        sort otherwise.
 
     aggs: (out_name, op, values) with op in {sum,count,min,max}; ``values`` is an
     array (an expression over t), a column name, or None for count.
     ``key_bits`` gives provable per-column bit widths (``0 <= t[k] < 2^bits``)
     so >2 key columns pack into the single int64 key (see ``combine_keys``)
-    AND so the direct path can trust the domain bound.  A lying ``key_bits``
-    claim never silently drops groups: out-of-domain valid rows route to the
-    dead slot and raise the overflow flag (``return_overflow=True`` returns
-    ``(table, overflow)``; the backends feed it to the re-execution runner).
+    AND so the direct path can trust the domain bound.  Neither claim ever
+    silently drops groups: a lying ``key_bits`` routes out-of-domain valid
+    rows to the dead slot and raises the overflow flag; a dictionary that
+    cannot place a row (full, or ``groups_hint`` undercounted the distinct
+    groups) raises the same flag (``return_overflow=True`` returns
+    ``(table, overflow)``; the backends feed it to the re-execution runner,
+    whose capacity-factor escalation scales ``hash_factor`` and hence the
+    dictionary).
     Output: key columns + agg columns; count = number of groups; group order
-    is ascending packed key on both paths; capacity preserved
+    is ascending packed key on all paths; capacity preserved
     (n_groups <= count <= capacity); output is compact.
 
     Rows past ``count`` are unspecified and differ between paths: notably a
@@ -391,20 +417,66 @@ def group_aggregate(t: Table, key_cols: Sequence[str],
         use_kernel = agg_kernel_default()
     direct_ok = (not key_cols) or (
         key_bits is not None and sum(key_bits) <= DIRECT_AGG_BITS_MAX)
+    hash_ok = bool(key_cols) and len(key_cols) <= 2 and \
+        groups_hint is not None and groups_hint <= HASH_AGG_GROUPS_MAX
     if method == "auto":
-        method = "direct" if direct_ok else "sort"
+        method = "direct" if direct_ok else ("hash" if hash_ok else "sort")
     if method == "direct":
         if not direct_ok:
             raise ValueError("group_aggregate: direct path needs key_bits "
                              f"with sum <= {DIRECT_AGG_BITS_MAX}")
         out, overflow = _group_aggregate_direct(t, key_cols, aggs, key_bits,
                                                 use_kernel)
+    elif method == "hash":
+        if not hash_ok:
+            raise ValueError("group_aggregate: hash path needs 1-2 key "
+                             "columns and groups_hint <= "
+                             f"{HASH_AGG_GROUPS_MAX}")
+        out, overflow = _group_aggregate_hash(t, key_cols, aggs, groups_hint,
+                                              hash_factor, use_kernel)
     elif method == "sort":
         out = _group_aggregate_sorted(t, key_cols, aggs, key_bits)
         overflow = jnp.asarray(False)
     else:
         raise ValueError(f"unknown group_aggregate method {method!r}")
     return (out, overflow) if return_overflow else out
+
+
+def _reduce_aggs(t: Table, aggs, gid: jax.Array, dom: int, in_dom: jax.Array,
+                 cnt: jax.Array, use_kernel: bool, cap: int
+                 ) -> dict[str, jax.Array]:
+    """Shared sortless reduction core (direct + hash paths): per-agg (dom,)
+    arrays via the segsum kernel, with same-dtype sums batched into one
+    multi-column call.  ``in_dom`` masks rows excluded from every aggregate
+    (invalid, out-of-claimed-domain, unresolved); ``cnt`` is the group
+    occupancy, which doubles as every count aggregate."""
+    reduced: dict[str, jax.Array] = {}
+    sum_batches: dict = {}
+    for out_name, op, values in aggs:
+        if op == "count":
+            reduced[out_name] = cnt
+            continue
+        v = _agg_value(t, values, cap)
+        if op == "sum":
+            v = jnp.where(in_dom, v, jnp.zeros((), v.dtype))
+            sum_batches.setdefault(jnp.dtype(v.dtype), []).append((out_name, v))
+        elif op == "min":
+            v = jnp.where(in_dom, v, _dtype_max(v.dtype))
+            reduced[out_name] = _ss_ops.segment_reduce(
+                gid, v, dom, op="min", use_kernel=use_kernel)
+        elif op == "max":
+            v = jnp.where(in_dom, v, _dtype_min(v.dtype))
+            reduced[out_name] = _ss_ops.segment_reduce(
+                gid, v, dom, op="max", use_kernel=use_kernel)
+        else:
+            raise ValueError(f"unknown agg op {op!r}")
+    for dt, items in sum_batches.items():
+        stacked = jnp.stack([v for _, v in items], axis=1)
+        sums = _ss_ops.segment_reduce(gid, stacked, dom, op="sum",
+                                      use_kernel=use_kernel)
+        for i, (name, _) in enumerate(items):
+            reduced[name] = sums[:, i]
+    return reduced
 
 
 def _group_aggregate_direct(t: Table, key_cols: Sequence[str], aggs,
@@ -453,35 +525,62 @@ def _group_aggregate_direct(t: Table, key_cols: Sequence[str], aggs,
         dom_keys = (jnp.arange(dom, dtype=_I64) >> shift) & ((1 << b) - 1)
         out[k] = _scatter(dom_keys.astype(t[k].dtype))
 
-    # batch same-dtype sums into one multi-column kernel call
-    reduced: dict[str, jax.Array] = {}
-    sum_batches: dict = {}
-    for out_name, op, values in aggs:
-        if op == "count":
-            reduced[out_name] = cnt
-            continue
-        v = _agg_value(t, values, cap)
-        if op == "sum":
-            v = jnp.where(in_dom, v, jnp.zeros((), v.dtype))
-            sum_batches.setdefault(jnp.dtype(v.dtype), []).append((out_name, v))
-        elif op == "min":
-            v = jnp.where(in_dom, v, _dtype_max(v.dtype))
-            reduced[out_name] = _ss_ops.segment_reduce(
-                gid, v, dom, op="min", use_kernel=use_kernel)
-        elif op == "max":
-            v = jnp.where(in_dom, v, _dtype_min(v.dtype))
-            reduced[out_name] = _ss_ops.segment_reduce(
-                gid, v, dom, op="max", use_kernel=use_kernel)
-        else:
-            raise ValueError(f"unknown agg op {op!r}")
-    for dt, items in sum_batches.items():
-        stacked = jnp.stack([v for _, v in items], axis=1)
-        sums = _ss_ops.segment_reduce(gid, stacked, dom, op="sum",
-                                      use_kernel=use_kernel)
-        for i, (name, _) in enumerate(items):
-            reduced[name] = sums[:, i]
+    reduced = _reduce_aggs(t, aggs, gid, dom, in_dom, cnt, use_kernel, cap)
     for out_name, _, _ in aggs:
         out[out_name] = _scatter(reduced[out_name])
+    return Table(out, ngroups), overflow
+
+
+def _group_aggregate_hash(t: Table, key_cols: Sequence[str], aggs,
+                          groups_hint: int, hash_factor: float,
+                          use_kernel: bool) -> tuple[Table, jax.Array]:
+    """Hash-compaction path: trace-time dictionary -> ascending-key dense gid
+    -> segsum kernel.  Zero sorts without provable key widths.
+
+    The dictionary holds exact 64-bit keys (no domain claim to check), so the
+    only failure modes are capacity-shaped: a row the dictionary cannot place
+    (full, or an improbable probe-cluster) or more distinct groups than
+    ``groups_hint`` claimed.  Both raise the overflow flag; the fault
+    runner's escalation scales ``hash_factor`` (hence the dictionary), and
+    an undercounting hint falls to its hint-drop recompilation — unplaced
+    rows are EXCLUDED from every aggregate, never misassigned, so in-domain
+    groups stay exact even on a flagged run (the lying-``key_bits``
+    discipline, unchanged)."""
+    cap = t.capacity
+    valid = t.valid_mask()
+    # legacy collision-safe packing (1-2 columns) — no width claims needed;
+    # slots compare full 64-bit keys, so any int64 values group exactly
+    key = combine_keys([t[k] for k in key_cols])
+    dcap = _hg_ops.dict_capacity(groups_hint, hash_factor)
+    slot, dkeys, occupied, unresolved = _hg_ops.build_group_dict(
+        key, valid, dcap, use_kernel=use_kernel)
+    rank = _hg_ops.dict_rank(dkeys, occupied)            # dcap for empty slots
+    ngroups = occupied.sum().astype(jnp.int32)
+    overflow = unresolved | (ngroups > groups_hint)
+    resolved = valid & (slot >= 0)
+    # gid IS the final output row (ascending packed key), so the reduced
+    # arrays need no compaction scatter; dead slot = dcap (segsum convention)
+    gid = jnp.where(resolved, rank[jnp.maximum(slot, 0)],
+                    dcap).astype(jnp.int32)
+
+    def _fit(dom_vals: jax.Array) -> jax.Array:
+        if dcap >= cap:
+            return dom_vals[:cap]
+        return jnp.zeros((cap,), dom_vals.dtype).at[:dcap].set(dom_vals)
+
+    out: dict[str, jax.Array] = {}
+    # key columns scatter from the rows themselves (all rows of a group share
+    # the value, duplicate writes are benign) — no packed-key decode, so the
+    # path handles keys the bits-packing could not describe
+    gid_drop = jnp.where(resolved, gid, cap)
+    for k in key_cols:
+        out[k] = jnp.zeros((cap,), t[k].dtype).at[gid_drop].set(
+            t[k], mode="drop")
+    cnt = _ss_ops.segment_reduce(gid, None, dcap, op="count",
+                                 use_kernel=use_kernel)
+    reduced = _reduce_aggs(t, aggs, gid, dcap, resolved, cnt, use_kernel, cap)
+    for out_name, _, _ in aggs:
+        out[out_name] = _fit(reduced[out_name])
     return Table(out, ngroups), overflow
 
 

@@ -2,12 +2,15 @@
 
 Queries: the paper's model (§2.4) — re-execution at interactive speed.  Our
 static-shape adaptation adds one structured failure mode: capacity overflow
-(a shuffle bucket, a shrink, or a hash-join bucket table exceeded its planned
-size — all raise ``ctx.overflow``, never assert locally).  The runner
-escalates the capacity factor and re-executes; the factor also scales the
-hash-join per-bucket capacity (``_BaseContext.bucket_cap``), so escalation
-genuinely enlarges the buckets.  Unstructured failures (preempted node →
-surfaced as an exception in a real deployment) get bounded retries.
+(a shuffle bucket, a shrink, a hash-join bucket table, a narrowed wire lane,
+or the hash-aggregation group dictionary exceeded its planned size — all
+raise ``ctx.overflow``, never assert locally).  The runner escalates the
+capacity factor and re-executes; the factor also scales the hash-join
+per-bucket capacity (``_BaseContext.bucket_cap``) AND the group-by hash
+dictionary (``relational.group_aggregate(method="hash")`` sizes it
+``groups_hint * factor``), so escalation genuinely enlarges both.
+Unstructured failures (preempted node → surfaced as an exception in a real
+deployment) get bounded retries.
 
 Skew: the monitor computes the paper's §3.5 statistic (per-node send/recv max
 over mean) from exchange recv-counts; the planner consults Eq. 3 to pick
@@ -80,8 +83,9 @@ class QueryRunner:
                 # hints analyzed against stand-in metadata) NOR a lying wire
                 # bound tripping the narrow-lane range check: after one failed
                 # escalation, recompile the plan with no hints at all — the
-                # conservative program has no hint-induced overflow left and,
-                # with no bounds, every exchange ships at full width
+                # conservative program has no hint-induced overflow left
+                # (hash-dictionary group-bys degrade to the single-sort path)
+                # and, with no bounds, every exchange ships at full width
                 fn = query_fn.with_inference(False)
         if last_exc is not None:
             raise last_exc

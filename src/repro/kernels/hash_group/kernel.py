@@ -1,0 +1,142 @@
+"""Hash-compaction dictionary build for sortless group-by on unknown domains.
+
+The direct-addressing aggregation (``kernels/segsum``) needs the packed group
+key to BE the dense group id, which requires *provable* ``key_bits``.  Q13-style
+keys (orders-per-customer) are data-dependent: the domain is small but cannot
+be proved at plan time.  GPU engines answer this with a hash aggregation table
+built by atomics; the TPU adaptation here is a **write-once open-addressing
+dictionary built in VMEM across a sequential row-block grid** — the same
+trick ``radix_hist.counting_rank`` uses for its running totals:
+
+  * the dictionary is three ``(cap, 1)`` VMEM scratch planes — two int32 key
+    planes holding the full 64-bit key (the ``hash_probe`` two-plane scheme,
+    probed with the SAME ``bucket_of`` mix so both kernels hash identically)
+    plus an occupancy plane — carried across grid steps;
+  * each block's rows probe in lockstep rounds (linear probing from
+    ``bucket_of(key)``): a round gathers the candidate slot, resolves rows
+    whose key already sits there, and elects ONE writer per empty slot by a
+    one-hot minimum over row indices — no atomics, no scatter, and a slot
+    transitions empty -> occupied exactly once (write-once), so a resolved
+    row's slot can never be stolen by a later key;
+  * rows that exhaust ``rounds`` probes stay unresolved (``slot = -1``) — the
+    caller raises the overflow flag and the fault runner re-executes with a
+    larger dictionary (capacity-factor escalation), never silently merging or
+    dropping groups.
+
+The kernel returns hash-ordered slots; the wrapper (``ops.dict_rank``) turns
+occupied slots into ascending-key dense ids with an O(cap^2) chunked compare
+(cap is the SMALL dictionary, not the row count) so the aggregation output is
+ordered identically to the sort path, byte for byte.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.hash_probe.kernel import bucket_of
+
+
+def _insert_kernel(plo_ref, phi_ref, pv_ref, slot_ref, dlo_ref, dhi_ref,
+                   docc_ref, tlo, thi, tocc, *, blk: int, cap: int,
+                   rounds: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        tlo[...] = jnp.zeros_like(tlo)
+        thi[...] = jnp.zeros_like(thi)
+        tocc[...] = jnp.zeros_like(tocc)
+
+    lo = plo_ref[...][:, 0]                                   # (blk,)
+    hi = phi_ref[...][:, 0]
+    valid = pv_ref[...][:, 0] != 0
+    b = bucket_of(lo, hi, cap)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)   # (blk, 1)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (blk, cap), 1)
+    big = jnp.int32(blk)
+
+    def body(r, carry):
+        unres, out = carry
+        s = jax.lax.rem(b + r.astype(jnp.int32), jnp.int32(cap))  # linear probe
+        cl = tlo[...][s][:, 0]                                # (blk,) gathers
+        ch = thi[...][s][:, 0]
+        co = tocc[...][s][:, 0]
+        hit = unres & (co == 1) & (cl == lo) & (ch == hi)
+        out = jnp.where(hit, s, out)
+        unres = unres & ~hit
+        # elect ONE writer per still-empty slot: min row index attempting
+        att = unres & (co == 0)
+        m = att[:, None] & (s[:, None] == iota_c)             # (blk, cap)
+        win = jnp.min(jnp.where(m, rows, big), axis=0)        # (cap,)
+        has = (win < big)[:, None]                            # (cap, 1)
+        widx = jnp.minimum(win, blk - 1)
+        tlo[...] = jnp.where(has, lo[:, None][widx], tlo[...])
+        thi[...] = jnp.where(has, hi[:, None][widx], thi[...])
+        tocc[...] = jnp.where(has, jnp.int32(1), tocc[...])
+        # losers see the winner's key on the re-gather and probe on
+        cl2 = tlo[...][s][:, 0]
+        ch2 = thi[...][s][:, 0]
+        co2 = tocc[...][s][:, 0]
+        hit2 = unres & (co2 == 1) & (cl2 == lo) & (ch2 == hi)
+        out = jnp.where(hit2, s, out)
+        unres = unres & ~hit2
+        return unres, out
+
+    unres0 = valid
+    out0 = jnp.full((blk,), -1, jnp.int32)
+    _, out = jax.lax.fori_loop(0, rounds, body, (unres0, out0))
+    slot_ref[...] = out[:, None]
+    # the dictionary outputs are pinned to block 0: the last grid step's write
+    # is the final table (cheap — cap is small)
+    dlo_ref[...] = tlo[...]
+    dhi_ref[...] = thi[...]
+    docc_ref[...] = tocc[...]
+
+
+def hash_insert_pallas(plo: jax.Array, phi: jax.Array, pvalid: jax.Array,
+                       cap: int, blk: int = 512, rounds: int = 16,
+                       interpret: bool = False):
+    """Insert-or-lookup of (n,) int32 key planes into a (cap,) dictionary.
+
+    Returns ``(slot, dict_lo, dict_hi, occupied)``: per-row dictionary slot
+    (int32, ``-1`` = invalid or unresolved after ``rounds`` probes) plus the
+    final key planes and int32 occupancy of the dictionary.
+
+    VMEM working set: 3 ``(cap, 1)`` scratch planes resident across the
+    sequential grid + the ``(blk, cap)`` election tile per round — callers
+    bound ``blk * cap`` (``ops.build_group_dict`` does).
+    """
+    n = plo.shape[0]
+    assert n % blk == 0, (n, blk)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        functools.partial(_insert_kernel, blk=blk, cap=cap, rounds=rounds),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((cap, 1), lambda i: (0, 0)),         # resident
+            pl.BlockSpec((cap, 1), lambda i: (0, 0)),         # resident
+            pl.BlockSpec((cap, 1), lambda i: (0, 0)),         # resident
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cap, 1), jnp.int32),
+            pltpu.VMEM((cap, 1), jnp.int32),
+            pltpu.VMEM((cap, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(plo.reshape(n, 1), phi.reshape(n, 1), pvalid.reshape(n, 1))

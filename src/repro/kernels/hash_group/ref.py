@@ -1,0 +1,73 @@
+"""Oracles for the hash-compaction dictionary.
+
+``hash_insert_ref`` is the pure-jnp leg (``REPRO_AGG_KERNEL=0`` — the shipped
+CPU/GPU default): the SAME lockstep write-once probing as the Pallas kernel,
+but over all rows at once with int64 keys held directly.  It is deliberately
+**sort-free** — the group-by stage must lower to zero HLO sorts on every
+aggregation engine, so the oracle may not hide a ``jnp.unique`` argsort.  The
+winner of a contended empty slot is elected with a deterministic scatter-min
+over row indices (min is commutative, so the scatter is order-independent).
+
+The two legs may assign keys to DIFFERENT slots (block-sequential vs global
+lockstep races differ); that is fine by construction — the relational layer
+ranks occupied slots by key before anything consumes a group id, so the final
+aggregation output is identical either way.
+
+``group_ids_np`` is the NumPy end-to-end oracle (np.unique — allowed here,
+this one never traces) the property tests compare both legs against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hash_probe.kernel import bucket_of
+from repro.kernels.hash_probe.ops import _split64
+
+
+def hash_insert_ref(keys: jax.Array, valid: jax.Array, cap: int,
+                    rounds: int):
+    """(n,) int64 keys -> (slot, dict_keys (cap,) int64, occupied, unresolved).
+
+    ``slot[i] = -1`` for invalid rows and for rows still unresolved after
+    ``rounds`` probes (the caller's overflow signal)."""
+    n = keys.shape[0]
+    k = keys.astype(jnp.int64)
+    lo, hi = _split64(k)
+    b = bucket_of(lo, hi, cap)
+    iota = jnp.arange(n, dtype=jnp.int32)
+
+    def body(r, carry):
+        table, occ, slot, unres = carry
+        s = (b + r.astype(jnp.int32)) % cap
+        cur_hit = unres & occ[s] & (table[s] == k)
+        slot = jnp.where(cur_hit, s, slot)
+        unres = unres & ~cur_hit
+        att = unres & ~occ[s]
+        # deterministic winner per empty slot: scatter-min of row indices
+        winner = jnp.full((cap + 1,), n, jnp.int32).at[
+            jnp.where(att, s, cap)].min(iota)[:cap]
+        has = winner < n
+        wkey = k[jnp.minimum(winner, n - 1)]
+        table = jnp.where(has, wkey, table)      # has implies the slot empty
+        occ = occ | has
+        hit2 = unres & occ[s] & (table[s] == k)
+        slot = jnp.where(hit2, s, slot)
+        unres = unres & ~hit2
+        return table, occ, slot, unres
+
+    table, occ, slot, unres = jax.lax.fori_loop(
+        0, rounds, body,
+        (jnp.zeros((cap,), jnp.int64), jnp.zeros((cap,), bool),
+         jnp.full((n,), -1, jnp.int32), valid))
+    return slot, table, occ, jnp.any(unres)
+
+
+def group_ids_np(keys: np.ndarray, valid: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """NumPy oracle: ascending-key dense group ids (-1 invalid) + unique keys."""
+    uniq = np.unique(keys[valid])
+    gid = np.full(keys.shape[0], -1, np.int64)
+    gid[valid] = np.searchsorted(uniq, keys[valid])
+    return gid, uniq

@@ -40,10 +40,12 @@ shrinks partials before an exchange).  Plans NO LONGER state them:
     escalation alone cannot fix that, so the fault runner recompiles with
     inference off after a failed escalation (``distributed/fault.py``) —
     groups are never silently dropped either way.
-  * The sortless-vs-sorted aggregation choice follows from the inferred
-    widths per database: the same plan uses direct addressing at scale
-    factors where the key domain proves small and degrades to the single-sort
-    path where it does not.
+  * The aggregation method follows from the hints per database: direct
+    addressing where the key domain proves small, the hash-compaction
+    dictionary (``kernels/hash_group``) where only a ``groups_hint`` exists
+    (the Q13 shape — zero sorts with no width claim at all), and the
+    single-sort path otherwise.  The same plan degrades gracefully across
+    scale factors.
   * **Wire widths are inferred too**: every exchange (broadcast / shuffle /
     exchanged group-by / final gather) ships its payload at the lane widths
     the same column statistics prove (``core/wire.py``), with a per-column

@@ -94,7 +94,9 @@ def q13():
 
     ``groups_hint=256`` on the c_count histogram is a plan-author claim the
     planner cannot prove (orders-per-customer is data-dependent) — exactly
-    the case the explicit hint remains for; overflow re-executes if a
+    the case the explicit hint remains for.  The claim buys a sortless
+    group-by: the planner's method rule routes it through the hash-compaction
+    dictionary (``kernels/hash_group``), and overflow re-executes if a
     customer ever exceeds it."""
     o = scan("orders").filter(~like("o_comment", "special", "requests"))
     go = o.group_by(["o_custkey"], [("c_count", "count", None)],

@@ -164,6 +164,155 @@ def test_groups_hint_smaller_and_larger_than_true_groups():
 
 
 # ---------------------------------------------------------------------------
+# hash-compaction path (data-dependent domains): hash == sort, byte for byte
+# ---------------------------------------------------------------------------
+
+def _wide_key_table(seed, n=211, cap=256, masked=False):
+    """Keys from a WIDE, data-dependent domain (negatives included) — exactly
+    what the direct path cannot take and the hash dictionary exists for."""
+    rng = np.random.default_rng(seed)
+    t = from_numpy({
+        "k": rng.integers(-1000, 1 << 40, n).astype(np.int64),
+        "v": rng.normal(size=n),
+        "i": rng.integers(-50, 50, n).astype(np.int64),
+    }, capacity=cap)
+    if masked:
+        t = R.filter_rows(t, t["v"] > -0.4)
+    return t
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+@pytest.mark.parametrize("masked", [True, False])
+def test_hash_matches_sorted_all_ops(use_kernel, masked):
+    t = _wide_key_table(20, masked=masked)
+    aggs = OPS4 + [("imn", "min", "i"), ("imx", "max", "i"),
+                   ("isum", "sum", "i")]
+    hashed = R.group_aggregate(t, ["k"], aggs, method="hash",
+                               groups_hint=256, use_kernel=use_kernel)
+    sortd = R.group_aggregate(t, ["k"], aggs, method="sort")
+    _assert_tables_equal(hashed, sortd)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_hash_two_col_keys_match_sorted(use_kernel):
+    rng = np.random.default_rng(21)
+    n = 180
+    t = from_numpy({
+        "a": rng.integers(0, 1 << 20, n).astype(np.int64),
+        "b": rng.integers(0, 7, n).astype(np.int64),
+        "v": rng.normal(size=n),
+    }, capacity=256)
+    hashed = R.group_aggregate(t, ["a", "b"], OPS4, method="hash",
+                               groups_hint=512, use_kernel=use_kernel)
+    sortd = R.group_aggregate(t, ["a", "b"], OPS4, method="sort")
+    _assert_tables_equal(hashed, sortd)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_hash_empty_and_all_invalid(use_kernel):
+    t = _random_table(22, n=0, cap=32)
+    allinv = R.filter_rows(_wide_key_table(23), _wide_key_table(23)["v"] > 99)
+    for tt in (t, allinv):
+        hashed = R.group_aggregate(tt, ["k"], OPS4, method="hash",
+                                   groups_hint=64, use_kernel=use_kernel)
+        sortd = R.group_aggregate(tt, ["k"], OPS4, method="sort")
+        assert int(hashed.count) == int(sortd.count) == 0
+
+
+def test_hash_undercounting_hint_flags_overflow():
+    """groups_hint below the true distinct count must flag overflow; the
+    headroom factor may still have placed every group, in which case the
+    output is complete AND flagged (re-execution discipline, never silent)."""
+    t = _wide_key_table(24)                      # ~200 distinct keys
+    hashed, ov = R.group_aggregate(t, ["k"], OPS4, method="hash",
+                                   groups_hint=32, hash_factor=16.0,
+                                   return_overflow=True)
+    assert bool(ov)
+    sortd = R.group_aggregate(t, ["k"], OPS4, method="sort")
+    _assert_tables_equal(hashed, sortd)          # dict held them all anyway
+    # honest hint: no overflow
+    _, ov2 = R.group_aggregate(t, ["k"], OPS4, method="hash",
+                               groups_hint=256, return_overflow=True)
+    assert not bool(ov2)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_hash_dict_overflow_escalation_clears(use_kernel):
+    """A starved capacity factor leaves rows unplaceable (dictionary smaller
+    than the distinct groups) -> overflow; doubling the factor — exactly what
+    the fault runner's escalation does — clears it and reproduces the sort
+    path.  Unplaced rows are EXCLUDED, never misassigned: every group the
+    flagged run does emit is exact."""
+    rng = np.random.default_rng(25)
+    n = 230
+    t = from_numpy({"k": rng.integers(0, 1 << 35, n).astype(np.int64),
+                    "v": rng.normal(size=n)}, capacity=256)
+    aggs = [("s", "sum", "v"), ("c", "count", None)]
+    factor = 0.125                               # dict cap 32 < ~200 distinct
+    hashed, ov = R.group_aggregate(t, ["k"], aggs, method="hash",
+                                   groups_hint=230, hash_factor=factor,
+                                   use_kernel=use_kernel,
+                                   return_overflow=True)
+    assert bool(ov)
+    sortd = to_numpy(R.group_aggregate(t, ["k"], aggs, method="sort"))
+    got = to_numpy(hashed)
+    want = {int(k): (s, c) for k, s, c in
+            zip(sortd["k"], sortd["s"], sortd["c"])}
+    for k, s, c in zip(got["k"], got["s"], got["c"]):
+        ws, wc = want[int(k)]
+        assert wc == c and abs(ws - s) < 1e-12   # emitted groups are exact
+    while bool(ov):                              # QueryRunner's discipline
+        factor *= 2.0
+        hashed, ov = R.group_aggregate(t, ["k"], aggs, method="hash",
+                                       groups_hint=230, hash_factor=factor,
+                                       use_kernel=use_kernel,
+                                       return_overflow=True)
+        assert factor <= 16.0, "escalation failed to clear dict overflow"
+    _assert_tables_equal(hashed,
+                         R.group_aggregate(t, ["k"], aggs, method="sort"))
+
+
+def test_hash_auto_dispatch_and_guards():
+    t = _wide_key_table(26)
+    # auto: no key_bits but a hint -> hash == sort
+    auto = R.group_aggregate(t, ["k"], OPS4, groups_hint=256)
+    sortd = R.group_aggregate(t, ["k"], OPS4, method="sort")
+    _assert_tables_equal(auto, sortd)
+    with pytest.raises(ValueError):
+        R.group_aggregate(t, ["k"], OPS4, method="hash")      # no hint
+    with pytest.raises(ValueError):
+        R.group_aggregate(t, ["k"], OPS4, method="hash",
+                          groups_hint=R.HASH_AGG_GROUPS_MAX + 1)
+    # direct outranks hash when both are eligible (cheaper: no dictionary)
+    t2 = _random_table(27)
+    both = R.group_aggregate(t2, ["k"], OPS4, key_bits=[4], groups_hint=16)
+    _assert_tables_equal(both, R.group_aggregate(t2, ["k"], OPS4,
+                                                 method="sort"))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_q13_hash_path_matches_sort_path_both_planner_legs(use_kernel):
+    """The tentpole acceptance case: Q13's data-dependent c_count histogram.
+    Inference ON compiles the hash path (planner rule), inference OFF the
+    single-sort path — byte-identical results per engine, and both match the
+    NumPy reference."""
+    from repro.queries import QUERIES
+    db = tpch.generate(0.002, seed=3)
+    r_hash, _ = B.run_local(QUERIES[13].with_inference(True), db,
+                            use_kernel=use_kernel)
+    r_sort, _ = B.run_local(QUERIES[13].with_inference(False), db,
+                            use_kernel=use_kernel)
+    assert set(r_hash) == set(r_sort)
+    for k in r_hash:
+        np.testing.assert_array_equal(r_hash[k], r_sort[k], err_msg=k)
+    r_ref, _ = B.run_reference(QUERIES[13], db)
+    for k in set(r_ref) & set(r_hash):
+        np.testing.assert_allclose(np.asarray(r_hash[k], np.float64),
+                                   np.asarray(r_ref[k], np.float64),
+                                   rtol=1e-7, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
 # shuffle dispatch: counting rank == stable-sort rank, byte for byte
 # ---------------------------------------------------------------------------
 

@@ -122,6 +122,61 @@ def test_direct_aggregate_matches_reference(cols, bits, use_kernel):
     _check_direct_vs_oracle(cols, bits, use_kernel)
 
 
+# ---------------------------------------------------------------------------
+# hash-compaction dictionary insert vs the NumPy oracle (capacity boundary)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 120), st.integers(1, 24), st.integers(0, 2**31),
+       st.booleans(), st.booleans())
+def test_dict_insert_matches_oracle_at_capacity_boundary(n, distinct, seed,
+                                                         use_kernel, exact):
+    """The insert-or-lookup dictionary must agree with np.unique for any key
+    set that fits: same distinct keys, a consistent slot per key, and rank
+    ids identical to the oracle's ascending order.  ``exact`` pins the
+    dictionary to EXACTLY the distinct-key count (tiny caps scan every slot,
+    so a 100% load factor must still resolve); otherwise the default 2x
+    headroom applies.  Negative and 40-bit keys exercise both planes."""
+    from repro.kernels.hash_group import ops as HG
+    from repro.kernels.hash_group.ref import group_ids_np
+    rng = np.random.default_rng(seed)
+    domain = rng.integers(-(1 << 40), 1 << 40, distinct).astype(np.int64)
+    keys = domain[rng.integers(0, distinct, n)]
+    valid = rng.random(n) > 0.25
+    uniq = np.unique(keys[valid])
+    cap = max(1, len(uniq)) if exact else HG.dict_capacity(len(uniq))
+    slot, dkeys, occ, unres = HG.build_group_dict(
+        jnp.asarray(keys), jnp.asarray(valid), cap, use_kernel=use_kernel)
+    slot, dkeys, occ = map(np.asarray, (slot, dkeys, occ))
+    assert not bool(unres)
+    assert sorted(dkeys[occ].tolist()) == uniq.tolist()
+    assert (slot[valid] >= 0).all()
+    np.testing.assert_array_equal(dkeys[slot[valid]], keys[valid])
+    rank = np.asarray(HG.dict_rank(jnp.asarray(dkeys), jnp.asarray(occ)))
+    gid_oracle, _ = group_ids_np(keys, valid)
+    np.testing.assert_array_equal(rank[slot[valid]], gid_oracle[valid])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31), st.booleans())
+def test_dict_insert_overflow_is_flagged_not_silent(extra, seed, use_kernel):
+    """More distinct keys than slots: the flag MUST fire, and every resolved
+    row must still point at its own key (unplaced rows are -1, never
+    misassigned)."""
+    from repro.kernels.hash_group import ops as HG
+    cap = 16
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation((np.arange(cap + extra) * 7919).astype(np.int64))
+    slot, dkeys, occ, unres = HG.build_group_dict(
+        jnp.asarray(keys), jnp.ones(len(keys), bool), cap,
+        use_kernel=use_kernel)
+    slot, dkeys, occ = map(np.asarray, (slot, dkeys, occ))
+    assert bool(unres)
+    placed = slot >= 0
+    np.testing.assert_array_equal(dkeys[slot[placed]], keys[placed])
+    assert occ.sum() <= cap
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 200), st.integers(0, 2**31), st.booleans())
 def test_direct_aggregate_jcch_skewed_keys(n, seed, use_kernel):

@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Docs-consistency gate (CI): the README engine-flag matrix must cover every
+``REPRO_*`` flag the code actually reads, and no tracked bytecode may sneak
+back into the repository.
+
+Checks, each fatal:
+  1. every ``REPRO_[A-Z_]+`` token appearing in ``src/`` is documented in
+     README.md (so a new flag cannot ship undocumented);
+  2. every ``REPRO_*`` flag the README documents still exists in ``src/``
+     (so the matrix cannot rot);
+  3. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
+     (commit ebdc242 shipped bytecode once; never again).
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FLAG_RE = re.compile(r"\bREPRO_[A-Z_]+\b")
+
+
+def flags_in_src() -> set[str]:
+    found = set()
+    for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, "src")):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for f in filenames:
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f)) as fh:
+                    found |= set(FLAG_RE.findall(fh.read()))
+    return found
+
+
+def flags_in_readme() -> set[str]:
+    with open(os.path.join(ROOT, "README.md")) as fh:
+        return set(FLAG_RE.findall(fh.read()))
+
+
+def tracked_bytecode() -> list[str]:
+    out = subprocess.run(["git", "ls-files", "*.pyc", "*__pycache__*"],
+                         cwd=ROOT, capture_output=True, text=True, check=True)
+    return [l for l in out.stdout.splitlines() if l]
+
+
+def main() -> int:
+    errors = []
+    src, readme = flags_in_src(), flags_in_readme()
+    undocumented = sorted(src - readme)
+    stale = sorted(readme - src)
+    if undocumented:
+        errors.append(f"flags read in src/ but missing from the README "
+                      f"matrix: {undocumented}")
+    if stale:
+        errors.append(f"flags documented in README but no longer read in "
+                      f"src/: {stale}")
+    pyc = tracked_bytecode()
+    if pyc:
+        errors.append(f"tracked bytecode files: {pyc[:5]}"
+                      f"{' ...' if len(pyc) > 5 else ''}")
+    for e in errors:
+        print(f"check_docs: FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({sorted(src)} documented, no tracked "
+              f"bytecode)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
