@@ -235,6 +235,23 @@ class _BaseContext:
         if stats is not None:
             self.stats.log.append(stats)
 
+    # -- chaos fault injection ---------------------------------------------
+    # a ChaosInjector (distributed/chaos.py), attached by the run_* drivers;
+    # None (the default) makes every cut point a no-op
+    chaos = None
+
+    def _chaos_point(self, cut: str, tamperable: bool = False):
+        """Named failure-domain cut point (scan / exchange / group_by /
+        finalize).  Asks the armed injector for a fault due here this
+        attempt: TRANSIENT/DETERMINISTIC faults raise (aborting the trace),
+        STRAGGLER sleeps, OVERFLOW ORs the traced ``ctx.overflow`` flag, and
+        CORRUPT returns a payload tamper callable when the call site can
+        route it into a checksummed exchange (``tamperable``) — otherwise it
+        ORs ``ctx.corrupt`` directly, simulating the detection."""
+        if self.chaos is None:
+            return None
+        return self.chaos.fire(cut, self, tamperable=tamperable)
+
 
 # ===========================================================================
 # NumPy reference backend
@@ -352,6 +369,7 @@ class LocalContext(_BaseContext):
         super().__init__(db, capacity_factor, wire_format)
         self._tables = tables
         self.overflow = jnp.asarray(False)
+        self.corrupt = jnp.asarray(False)
         self.join_method = join_method
         # use_kernel=False runs aggregation/dispatch through the jnp oracle
         # (the CI matrix leg); None -> REPRO_AGG_KERNEL env default
@@ -359,6 +377,7 @@ class LocalContext(_BaseContext):
             else use_kernel
 
     def scan(self, name):
+        self._chaos_point("scan")
         return self._tables[name]
 
     def filter(self, t, mask):
@@ -426,6 +445,7 @@ class LocalContext(_BaseContext):
         when ``groups_hint`` is claimed but ``key_bits`` is unprovable);
         the dictionary capacity scales with the runner's capacity factor so
         escalation genuinely enlarges it on re-execution."""
+        self._chaos_point("group_by")
         aggs, avg_post = _expand_avg(list(aggs))
         out, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
                                       key_bits=key_bits, method=method,
@@ -451,6 +471,7 @@ class LocalContext(_BaseContext):
         return out
 
     def agg_scalar(self, t, aggs):
+        self._chaos_point("group_by")   # scalar aggregation = group_by domain
         self._count("allreduce")
         aggs, avg_post = _expand_avg(list(aggs))
         g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs),
@@ -462,10 +483,12 @@ class LocalContext(_BaseContext):
         return out
 
     def shuffle(self, t, key, wire=None):
+        self._chaos_point("exchange")
         self._count("shuffle", self._wire_entry("shuffle", t, wire))
         return t
 
     def broadcast(self, t, p2p=False, wire=None):
+        self._chaos_point("exchange")
         kind = "broadcast_p2p" if p2p else "broadcast"
         self._count(kind, self._wire_entry(kind, t, wire,
                                            narrow=False if p2p else None))
@@ -479,6 +502,7 @@ class LocalContext(_BaseContext):
 
     def finalize(self, t, sort_keys=None, limit=None, replicated=False,
                  wire=None):
+        self._chaos_point("finalize")
         if not replicated:
             self._count("gather", self._wire_entry("gather", t, wire))
         if sort_keys:
@@ -513,26 +537,36 @@ class DistContext(LocalContext):
 
     # -- exchanges ----------------------------------------------------------
     def shuffle(self, t, key, dest_ids=None, wire=None):
+        tamper = self._chaos_point("exchange", tamperable=self.packed)
         self._count("shuffle")
         keyv = t[key] if isinstance(key, str) else self._key(t, key)
         cap_per_dest = max(8, math.ceil(t.capacity * self.capacity_factor / self.N))
-        out, ov, _, stats = ex.shuffle(t, keyv, self.axis, self.N, cap_per_dest,
-                                       packed=self.packed, dest_ids=dest_ids,
-                                       use_kernel=self.use_kernel,
-                                       wire=wire, narrow=self.wire_narrow)
+        out, ov, cr, _, stats = ex.shuffle(t, keyv, self.axis, self.N,
+                                           cap_per_dest,
+                                           packed=self.packed, dest_ids=dest_ids,
+                                           use_kernel=self.use_kernel,
+                                           wire=wire, narrow=self.wire_narrow,
+                                           tamper=tamper)
         self.stats.log.append(stats)
         self.overflow = self.overflow | ov
+        self.corrupt = self.corrupt | cr
         return out
 
     def broadcast(self, t, p2p=False, wire=None):
+        # the p2p baseline ships unchecked — corrupt faults here are simulated
+        tamper = self._chaos_point("exchange",
+                                   tamperable=self.packed and not p2p)
         self._count("broadcast_p2p" if p2p else "broadcast")
         if p2p:
             out, stats = ex.broadcast_table_p2p(t, self.axis, self.N)
         else:
-            out, ov, stats = ex.broadcast_table(t, self.axis, self.N,
-                                                packed=self.packed, wire=wire,
-                                                narrow=self.wire_narrow)
+            out, ov, cr, stats = ex.broadcast_table(t, self.axis, self.N,
+                                                    packed=self.packed,
+                                                    wire=wire,
+                                                    narrow=self.wire_narrow,
+                                                    tamper=tamper)
             self.overflow = self.overflow | ov
+            self.corrupt = self.corrupt | cr
         self.stats.log.append(stats)
         return out
 
@@ -551,6 +585,8 @@ class DistContext(LocalContext):
         merge, so both sides of the exchange stay sortless.
         wire: provable (lo, hi) bounds per partial column — the exchange
         ships the partial at its inferred lane widths."""
+        tamper = self._chaos_point(
+            "group_by", tamperable=self.packed and exchange != "local")
         aggs, avg_post = _expand_avg(list(aggs))
         partial, ov = rel.group_aggregate(t, keys, _eval_aggs(self, t, aggs),
                                           key_bits=key_bits, method=method,
@@ -574,20 +610,24 @@ class DistContext(LocalContext):
                     else partial[keys[0]]
                 cap_per_dest = max(8, math.ceil(
                     partial.capacity * self.capacity_factor / self.N))
-                moved, ov, _, stats = ex.shuffle(partial, keyv, self.axis, self.N,
-                                                 cap_per_dest, packed=self.packed,
-                                                 use_kernel=self.use_kernel,
-                                                 wire=wire,
-                                                 narrow=self.wire_narrow)
+                moved, ov, cr, _, stats = ex.shuffle(partial, keyv, self.axis,
+                                                     self.N, cap_per_dest,
+                                                     packed=self.packed,
+                                                     use_kernel=self.use_kernel,
+                                                     wire=wire,
+                                                     narrow=self.wire_narrow,
+                                                     tamper=tamper)
                 self.stats.log.append(stats)
                 self.overflow = self.overflow | ov
+                self.corrupt = self.corrupt | cr
             elif exchange == "gather":
                 kind = "gather" if final else "broadcast"
                 self._count(kind)
-                moved, ov, stats = ex.broadcast_table(
+                moved, ov, cr, stats = ex.broadcast_table(
                     partial, self.axis, self.N, packed=self.packed,
-                    wire=wire, narrow=self.wire_narrow)
+                    wire=wire, narrow=self.wire_narrow, tamper=tamper)
                 self.overflow = self.overflow | ov
+                self.corrupt = self.corrupt | cr
                 self.stats.log.append(dataclasses.replace(stats, kind=kind))
             else:
                 raise ValueError(exchange)
@@ -608,7 +648,8 @@ class DistContext(LocalContext):
         return out
 
     def agg_scalar(self, t, aggs):
-        self._count("allreduce")
+        self._chaos_point("group_by")   # allreduce ships unchecked scalars:
+        self._count("allreduce")        # corrupt faults here are simulated
         aggs, avg_post = _expand_avg(list(aggs))
         g = rel.group_aggregate(t, [], _eval_aggs(self, t, aggs),
                                 use_kernel=self.use_kernel)
@@ -626,6 +667,8 @@ class DistContext(LocalContext):
 
         ``replicated=True`` marks tables already merged on every device (e.g.
         after group_by(exchange='gather')) — no further collection needed."""
+        tamper = self._chaos_point(
+            "finalize", tamperable=self.packed and not replicated)
         if replicated:
             if sort_keys:
                 t = rel.sort_by(t, sort_keys)
@@ -639,10 +682,12 @@ class DistContext(LocalContext):
             t = rel.sort_by(t, sort_keys)
         if limit is not None:
             t = rel.limit(t, limit)   # local top-k before the gather
-        t, ov, stats = ex.broadcast_table(t, self.axis, self.N,
-                                          packed=self.packed, wire=wire,
-                                          narrow=self.wire_narrow)
+        t, ov, cr, stats = ex.broadcast_table(t, self.axis, self.N,
+                                              packed=self.packed, wire=wire,
+                                              narrow=self.wire_narrow,
+                                              tamper=tamper)
         self.overflow = self.overflow | ov
+        self.corrupt = self.corrupt | cr
         self.stats.log.append(dataclasses.replace(stats, kind="gather"))
         if sort_keys:
             t = rel.sort_by(t, sort_keys)
@@ -679,6 +724,7 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
 def run_local(query_fn, db: Database, jit: bool = True,
               join_method: str = "sorted", use_kernel: bool | None = None,
               capacity_factor: float = 2.0, wire_format: str | None = None,
+              chaos=None,
               ) -> tuple[dict, PlanStats]:
     tables = _np_db_to_tables(db)
     holder = {}
@@ -687,15 +733,18 @@ def run_local(query_fn, db: Database, jit: bool = True,
         ctx = LocalContext(db, tables, capacity_factor=capacity_factor,
                            join_method=join_method, use_kernel=use_kernel,
                            wire_format=wire_format)
+        ctx.chaos = chaos
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
             out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
                         jnp.asarray(1, jnp.int32))
-        return rel.ensure_compact(out), ctx.overflow
+        return rel.ensure_compact(out), ctx.overflow, ctx.corrupt
 
     fn = jax.jit(run) if jit else run
-    out, overflow = fn(tables)
+    out, overflow, corrupt = fn(tables)
+    if bool(corrupt):
+        raise wi.CorruptPayload("local run: payload integrity check failed")
     assert not bool(overflow), "capacity overflow in local run"
     return to_numpy(out), holder["stats"]
 
@@ -772,11 +821,15 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
                     join_method: str = "sorted",
                     use_kernel: bool | None = None,
                     wire_format: str | None = None,
+                    chaos=None,
                     ) -> tuple[dict, PlanStats, Any]:
     """Run a query SPMD over ``mesh[axis]``; returns (result, stats, overflow).
 
     One logical process per device, all executing the same tensor program —
-    the paper's MPI model realized as a single shard_map program.
+    the paper's MPI model realized as a single shard_map program.  A payload
+    integrity failure (``ctx.corrupt``, set by the wire checksums — possibly
+    via an armed ``chaos`` injector's tamper) raises :class:`CorruptPayload`
+    host-side: corrupted buffers are never decoded into served results.
     """
     n = mesh.shape[axis]
     sharded, caps = partition_database(db, n, partition_keys)
@@ -790,6 +843,7 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
         ctx = DistContext(db, tables, axis, n, capacity_factor,
                           packed_exchange, join_method, use_kernel,
                           wire_format)
+        ctx.chaos = chaos
         out = query_fn(ctx)
         holder["stats"] = ctx.stats
         if isinstance(out, dict):
@@ -797,13 +851,16 @@ def run_distributed(query_fn, db: Database, mesh: Mesh, axis: str = "data",
                         jnp.asarray(1, jnp.int32))
         out = rel.ensure_compact(out)   # host extraction slices [0, count)
         return (Table(dict(out.columns), out.count.reshape(1)),
-                ctx.overflow.reshape(1))
+                ctx.overflow.reshape(1), ctx.corrupt.reshape(1))
 
     inp = {name: {k: jnp.asarray(v) for k, v in cols.items()}
            for name, cols in sharded.items()}
     fn = jax.jit(compat.shard_map(spmd, mesh=mesh, in_specs=P(axis),
                                   out_specs=P(axis)))
-    out, overflow = fn(inp)
+    out, overflow, corrupt = fn(inp)
+    if bool(np.any(np.asarray(corrupt))):
+        raise wi.CorruptPayload(
+            "distributed run: payload integrity check failed")
     result = Table({k: v[: v.shape[0] // n] for k, v in out.columns.items()},
                    out.count[0])
     return to_numpy(result), holder["stats"], bool(np.any(np.asarray(overflow)))

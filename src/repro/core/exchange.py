@@ -37,6 +37,12 @@ driven **wire format** (:mod:`repro.core.wire`):
     overflow flag (ORed into ``ctx.overflow`` -> the fault runner re-executes,
     dropping inference and hence the narrow format).  Lying bounds can
     therefore cost a retry but can never silently truncate a value.
+  * **Integrity word** — packed exchanges fold an integrity checksum of each
+    per-sender payload block into the same fused header row
+    (:func:`repro.core.wire.header_mode`); receivers verify every block and
+    raise the ``corrupt`` flag on mismatch (ORed into ``ctx.corrupt`` -> the
+    fault runner re-executes on the wide format).  The ``tamper`` hook lets
+    the chaos harness flip received payload bits inside the traced program.
 
 ``ExchangeStats`` reports both actual wire bytes (packed words incl. the
 header row) and logical dtype-true bytes, so the compression ratio is visible
@@ -166,18 +172,23 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
             dest_ids: jax.Array | None = None,
             use_kernel: bool | None = None,
             wire: Mapping | None = None, narrow: bool | None = None,
-            ) -> tuple[Table, jax.Array, jax.Array, ExchangeStats]:
+            tamper=None,
+            ) -> tuple[Table, jax.Array, jax.Array, jax.Array, ExchangeStats]:
     """Repartition ``t`` by ``hash(key) % N`` across the mesh axis.
 
-    Returns (table, overflowed, per-sender recv counts, stats).  The output
-    table has capacity ``N * cap_per_dest``; ``overflowed`` is True on any
-    device whose bucket exceeded ``cap_per_dest`` (rows are dropped — the
+    Returns (table, overflowed, corrupt, per-sender recv counts, stats).  The
+    output table has capacity ``N * cap_per_dest``; ``overflowed`` is True on
+    any device whose bucket exceeded ``cap_per_dest`` (rows are dropped — the
     fault-tolerant runner re-executes with a larger capacity factor, the
     static-shape analogue of re-allocating NCCL receive buffers) OR whose
     narrowed wire lanes saw an out-of-bounds value (re-execution recompiles
     at full width).  In packed mode the per-destination counts ride as a
     header row of the payload buffer, so the whole exchange — size metadata
-    included — is ONE ``all_to_all``.
+    included — is ONE ``all_to_all``; each block also carries its integrity
+    checksum in the header row, verified on receive into ``corrupt`` (the
+    per-column baseline ships unchecked: statically False).  ``tamper``, if
+    given, maps the received payload sub-buffer to a corrupted copy (chaos
+    injection — applied before verification, so injected flips are caught).
     """
     N, cap = num_partitions, t.capacity
     dest = jnp.where(t.valid_mask(),
@@ -199,10 +210,21 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
         overflow = overflow | ov_wire
         send = jnp.zeros((N * blk, fmt.words), jnp.int32) \
             .at[flat_idx].set(buf, mode="drop") \
-            .at[jnp.arange(N) * blk, 0].set(counts_capped)
-        recv = jax.lax.all_to_all(send.reshape(N, blk, fmt.words),
-                                  axis_name, 0, 0)
-        recv_counts = recv[:, 0, 0]
+            .reshape(N, blk, fmt.words)
+        cmode = wi.header_mode(fmt.words, cap_per_dest)
+        csum = jax.vmap(wi.payload_checksum)(send[:, 1:, :])
+        send = send.at[:, 0, 0].set(
+            wi.encode_header_word0(counts_capped, csum, cmode))
+        if cmode == "word":
+            send = send.at[:, 0, 1].set(
+                wi.encode_checksum_word(counts_capped, csum))
+        recv = jax.lax.all_to_all(send, axis_name, 0, 0)
+        if tamper is not None:
+            recv = recv.at[:, 1:, :].set(tamper(recv[:, 1:, :]))
+        recv_counts = wi.decode_header_word0(recv[:, 0, 0], cmode)
+        corrupt = jnp.any(jax.vmap(
+            lambda h, p: wi.verify_block_checksum(h, p, cmode))(
+                recv[:, 0, :], recv[:, 1:, :]))
         cols = unpack_columns(recv[:, 1:, :].reshape(N * cap_per_dest,
                                                      fmt.words), fmt)
         n_coll = 1
@@ -211,6 +233,7 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
         row_wire, row_logical = fmt.row_wire_bytes, fmt.row_logical_bytes
         wire_tag = "narrow" if fmt.narrow else "wide"
     else:  # paper-faithful: one collective per column + the metadata round
+        corrupt = jnp.asarray(False)   # §2.3 baseline ships unchecked
         flat_idx = dest * cap_per_dest + jnp.minimum(slot, cap_per_dest - 1)
         keep = (slot < cap_per_dest) & (dest < N)
         flat_idx = jnp.where(keep, flat_idx, N * cap_per_dest)
@@ -260,7 +283,7 @@ def shuffle(t: Table, key: jax.Array, axis_name: str, num_partitions: int,
         row_logical_bytes=row_logical,
         wire=wire_tag,
     )
-    return out, overflow, recv_counts, stats
+    return out, overflow, corrupt, recv_counts, stats
 
 
 def _unbitcast(part: jax.Array, dt) -> jax.Array:
@@ -277,28 +300,41 @@ def _unbitcast(part: jax.Array, dt) -> jax.Array:
 
 def broadcast_table(t: Table, axis_name: str, num_partitions: int,
                     packed: bool = True, wire: Mapping | None = None,
-                    narrow: bool | None = None,
-                    ) -> tuple[Table, jax.Array, ExchangeStats]:
+                    narrow: bool | None = None, tamper=None,
+                    ) -> tuple[Table, jax.Array, jax.Array, ExchangeStats]:
     """Replicate a distributed table on every device (paper Fig. 3).
 
     all_gather == the ring broadcast of Eq. 1 on the ICI torus: every device
     streams its shard around the ring; N-1 hops of S/N bytes each.  Returns
-    (table, overflow, stats); in packed mode the per-shard row count rides as
-    a header row of the gathered buffer (ONE collective), and ``overflow``
-    reports narrowed-lane range violations (always False when wide).
+    (table, overflow, corrupt, stats); in packed mode the per-shard row count
+    AND payload checksum ride as a header row of the gathered buffer (ONE
+    collective), ``overflow`` reports narrowed-lane range violations (always
+    False when wide) and ``corrupt`` reports a per-shard checksum mismatch
+    after the optional ``tamper`` hook (per-column mode: statically False).
     """
     # the gathered payload is reconstructed from per-shard counts alone, so the
     # payload must be front-compacted — this is a true contiguity boundary
     t = ensure_compact(t)
     N, cap = num_partitions, t.capacity
     overflow = jnp.asarray(False)
+    corrupt = jnp.asarray(False)
     if packed:
         buf, fmt, overflow = pack_columns(t, wire=wire, narrow=narrow)
+        cmode = wi.header_mode(fmt.words, cap)
+        csum = wi.payload_checksum(buf)
+        count32 = t.count.astype(jnp.int32)
         hdr = jnp.zeros((1, fmt.words), jnp.int32) \
-            .at[0, 0].set(t.count.astype(jnp.int32))
+            .at[0, 0].set(wi.encode_header_word0(count32, csum, cmode))
+        if cmode == "word":
+            hdr = hdr.at[0, 1].set(wi.encode_checksum_word(count32, csum))
         recv = jax.lax.all_gather(jnp.concatenate([hdr, buf]), axis_name,
                                   tiled=True).reshape(N, cap + 1, fmt.words)
-        counts = recv[:, 0, 0]
+        if tamper is not None:
+            recv = recv.at[:, 1:, :].set(tamper(recv[:, 1:, :]))
+        counts = wi.decode_header_word0(recv[:, 0, 0], cmode)
+        corrupt = jnp.any(jax.vmap(
+            lambda h, p: wi.verify_block_checksum(h, p, cmode))(
+                recv[:, 0, :], recv[:, 1:, :]))
         cols = unpack_columns(recv[:, 1:, :].reshape(N * cap, fmt.words), fmt)
         n_coll, words, msg_rows = 1, fmt.words, cap + 1
         row_wire, row_logical = fmt.row_wire_bytes, fmt.row_logical_bytes
@@ -332,7 +368,7 @@ def broadcast_table(t: Table, axis_name: str, num_partitions: int,
                           row_wire_bytes=row_wire,
                           row_logical_bytes=row_logical,
                           wire=wire_tag)
-    return out, overflow, stats
+    return out, overflow, corrupt, stats
 
 
 def broadcast_table_p2p(t: Table, axis_name: str, num_partitions: int,

@@ -876,16 +876,39 @@ def validate(root: P.Node, db) -> list[str]:
 # execution
 # ---------------------------------------------------------------------------
 
+def _is_exchange_node(node: P.Node) -> bool:
+    """Nodes whose output is a post-exchange (replicated / reshuffled) state
+    — the lineage-snapshot cut points."""
+    return isinstance(node, (P.Shuffle, P.Broadcast)) or \
+        (isinstance(node, P.GroupBy) and node.exchange != "local")
+
+
 class _Executor:
     """Walk a plan DAG against a physical Context; each node runs once (the
-    per-plan memo is also what makes the backend's build-side cache hit)."""
+    per-plan memo is also what makes the backend's build-side cache hit).
+
+    When the context carries a ``lineage`` store
+    (:class:`repro.distributed.lineage.LineageStore`, eager local runs
+    only), every exchange-type node consults the store BEFORE recursing:
+    a snapshot hit returns the durable post-exchange table and skips the
+    entire subtree — depth-first from the root, so a query resumes from the
+    topmost (= last computed, fewest-ops-remaining) durable exchange.  A
+    miss executes the node and persists its output.  Tags are the node's
+    ordinal in the deterministic ``walk()`` order."""
 
     def __init__(self, ctx, info: PlanInfo | None):
         self.ctx = ctx
         self.info = info
         self.memo: dict[int, Any] = {}
+        self._tags: dict[int, int] = {}
 
     def run(self, node: P.Node):
+        store = getattr(self.ctx, "lineage", None)
+        if store is not None:
+            nodes = walk(node)
+            self._tags = {id(n): i for i, n in enumerate(nodes)}
+            store.begin_executor(nodes, self.info is not None,
+                                 getattr(self.ctx, "wire_format", None))
         return self._exec(node)
 
     def _wire(self, node: P.Node):
@@ -952,7 +975,15 @@ class _Executor:
     def _exec(self, node: P.Node):
         if id(node) in self.memo:
             return self.memo[id(node)]
-        out = self._exec_inner(node)
+        store = getattr(self.ctx, "lineage", None)
+        if store is not None and _is_exchange_node(node):
+            tag = self._tags[id(node)]
+            out = store.load(tag)      # checked BEFORE recursing: a hit
+            if out is None:            # skips the whole subtree
+                out = self._exec_inner(node)
+                store.save(tag, out, self.ctx)
+        else:
+            out = self._exec_inner(node)
         self.memo[id(node)] = out
         return out
 

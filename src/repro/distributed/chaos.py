@@ -1,0 +1,236 @@
+"""Seeded, deterministic fault injection — the chaos harness.
+
+The paper's fault story (§2.4) is "re-execute the whole query"; proving that
+story (and the finer-grained recovery this repo layers on top) requires
+*injecting* every failure domain on demand, deterministically, so a CI leg
+can replay the exact same fault schedule on every commit.
+
+A :class:`FaultPlan` is a seeded list of :class:`FaultSpec` entries, each
+naming WHERE (a cut point: ``scan`` / ``exchange`` / ``group_by`` /
+``finalize``, or ``any`` for the first cut visited), WHEN (which visit of
+that cut, on which run attempt) and WHAT (a fault kind) to inject.  The
+:class:`ChaosInjector` holds the plan plus per-attempt visit counters; the
+execution backends call :meth:`ChaosInjector.fire` from
+``_BaseContext._chaos_point`` at every cut point.
+
+Fault kinds and their mechanism:
+
+  ``transient``      raises :class:`TransientFault` (simulated node loss /
+                     flaky link) — aborts the attempt while tracing.
+  ``deterministic``  raises ``ValueError`` (simulated plan-author bug) —
+                     the fault runner must surface it on attempt 1, never
+                     burn retries on it.
+  ``straggler``      sleeps ``delay_s`` (simulated slow node) — the attempt
+                     succeeds, late; visible in per-attempt wall time.
+  ``overflow``       ORs the traced ``ctx.overflow`` flag (simulated lying
+                     capacity bound) — exercises the escalation ladder.
+  ``corrupt``        returns a payload-tamper callable that flips one
+                     seed-chosen bit of the received exchange buffer inside
+                     the compiled program — the wire checksum must catch it.
+                     At cut points with no checksummed payload in flight the
+                     detection is simulated by ORing ``ctx.corrupt``.
+
+Enabled for any test or bench via the ``REPRO_CHAOS`` env leg: unset / ``0``
+/ ``off`` disables; any other integer seeds :meth:`FaultPlan.default` (one
+transient + one corrupt + one overflow across the first three attempts) and
+arms the fault runner's default injector (``ChaosInjector.from_env``).
+
+Everything here is deterministic in (seed, plan, query): the same schedule
+fires at the same cut visits and flips the same bit on every run — chaos
+you can bisect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import os
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FailureKind", "TransientFault", "FaultSpec", "FaultPlan",
+    "FiredFault", "ChaosInjector", "chaos_env_seed",
+    "CUT_POINTS", "FAULT_KINDS",
+]
+
+CUT_POINTS = ("scan", "exchange", "group_by", "finalize")
+FAULT_KINDS = ("transient", "deterministic", "straggler", "overflow",
+               "corrupt")
+
+
+class FailureKind(enum.Enum):
+    """Failure taxonomy consumed by the retry policy (distributed/fault.py).
+
+    TRANSIENT      environment fault (node loss, flaky link, timeout):
+                   retry with exponential backoff.
+    OVERFLOW       capacity/bound violation (the overflow-not-wrong flag):
+                   escalate the capacity factor, then drop planner hints.
+    CORRUPT        payload failed its wire integrity checksum: re-run on the
+                   conservative wide format — never serve the bad buffer.
+    DETERMINISTIC  a plan-author bug (TypeError, ValueError, assertion …):
+                   raise immediately; retrying cannot help.
+    """
+    TRANSIENT = "transient"
+    OVERFLOW = "overflow"
+    CORRUPT = "corrupt"
+    DETERMINISTIC = "deterministic"
+
+
+class TransientFault(RuntimeError):
+    """Simulated (or real) environment fault: node loss, dropped link.
+    Classified TRANSIENT by the fault runner — retried with backoff."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: WHAT (``kind``), WHERE (``cut``, ``index``) and
+    WHEN (``attempt``, 1-based)."""
+    kind: str                 # one of FAULT_KINDS
+    cut: str = "any"          # CUT_POINTS entry, or "any" = first cut visited
+    index: int = 0            # which visit of that cut within the attempt
+    attempt: int = 1          # fires on this run attempt only
+    delay_s: float = 0.05     # straggler sleep
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.cut != "any" and self.cut not in CUT_POINTS:
+            raise ValueError(f"unknown cut point {self.cut!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded schedule of faults.  The seed drives every data-dependent
+    choice (which bit a corrupt fault flips), so a plan replays exactly."""
+    seed: int
+    faults: tuple[FaultSpec, ...]
+
+    @classmethod
+    def default(cls, seed: int) -> "FaultPlan":
+        """The chaos-sweep schedule: one transient, one corrupt and one
+        overflow fault across the first three attempts — a clean run needs
+        attempt 4, exercising every recovery path of the retry policy.
+        ``group_by`` covers scalar-only plans too (``agg_scalar`` fires it)."""
+        return cls(seed, (
+            FaultSpec("transient", cut="scan", index=0, attempt=1),
+            FaultSpec("corrupt", cut="group_by", index=0, attempt=2),
+            FaultSpec("overflow", cut="any", index=0, attempt=3),
+        ))
+
+
+@dataclasses.dataclass(frozen=True)
+class FiredFault:
+    """One injection that actually happened — surfaced in the RunReport."""
+    attempt: int
+    cut: str
+    index: int
+    kind: str
+    simulated: bool = False   # corrupt w/o a checksummed payload in flight
+
+
+def _mix(seed: int, *parts) -> int:
+    """Deterministic (process-stable) integer from seed + context parts —
+    NOT python ``hash()``, which is salted per process."""
+    return zlib.crc32(repr((seed,) + parts).encode())
+
+
+def chaos_env_seed() -> int | None:
+    """``REPRO_CHAOS`` env leg: unset / ``0`` / ``off`` -> None (disabled);
+    any other value is the integer seed of the default fault plan."""
+    v = os.environ.get("REPRO_CHAOS", "").strip().lower()
+    if v in ("", "0", "off", "false", "none"):
+        return None
+    return int(v)
+
+
+class ChaosInjector:
+    """Stateful driver of a :class:`FaultPlan` across run attempts.
+
+    The fault runner calls :meth:`begin_attempt` before each (re-)execution;
+    the backends call :meth:`fire` at every cut point.  Fired faults are
+    recorded in :attr:`events` for the per-attempt RunReport.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.events: list[FiredFault] = []
+        self.begin_attempt(1)
+
+    @classmethod
+    def from_env(cls) -> "ChaosInjector | None":
+        seed = chaos_env_seed()
+        return None if seed is None else cls(FaultPlan.default(seed))
+
+    def begin_attempt(self, attempt: int) -> None:
+        """Reset per-cut visit counters for a fresh (re-)execution."""
+        self._attempt = attempt
+        self._visits: dict[str, int] = {}
+        self._total = 0
+
+    # -- injection ----------------------------------------------------------
+    def fire(self, cut: str, ctx, tamperable: bool = False):
+        """Called by ``_BaseContext._chaos_point``.  Returns a tamper
+        callable for a corrupt fault the call site can route into a
+        checksummed exchange, else None.  May raise, sleep, or OR traced
+        fault flags on ``ctx`` — see the module docstring."""
+        i = self._visits.get(cut, 0)
+        self._visits[cut] = i + 1
+        total = self._total
+        self._total += 1
+        spec = self._due(cut, i, total)
+        if spec is None:
+            return None
+        if spec.kind == "transient":
+            self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
+            raise TransientFault(
+                f"chaos: node lost at {cut}#{i} (attempt {self._attempt})")
+        if spec.kind == "deterministic":
+            self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
+            raise ValueError(
+                f"chaos: plan bug at {cut}#{i} (attempt {self._attempt})")
+        if spec.kind == "straggler":
+            self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
+            time.sleep(spec.delay_s)
+            return None
+        if spec.kind == "overflow":
+            self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
+            ctx.overflow = ctx.overflow | jnp.asarray(True)
+            return None
+        # corrupt: flip a seed-chosen payload bit where a checksummed buffer
+        # is in flight; otherwise simulate the detection
+        self.events.append(FiredFault(self._attempt, cut, i, spec.kind,
+                                      simulated=not tamperable))
+        if not tamperable:
+            ctx.corrupt = ctx.corrupt | jnp.asarray(True)
+            return None
+        return self._tamper(cut, i)
+
+    def _due(self, cut: str, index: int, total: int) -> FaultSpec | None:
+        for spec in self.plan.faults:
+            if spec.attempt != self._attempt:
+                continue
+            if spec.cut == "any":
+                if total == spec.index:
+                    return spec
+            elif spec.cut == cut and spec.index == index:
+                return spec
+        return None
+
+    def _tamper(self, cut: str, index: int):
+        """Payload corrupter: flips ONE bit, chosen deterministically from
+        (seed, cut, index, attempt) — embedded in the traced program."""
+        r = _mix(self.plan.seed, cut, index, self._attempt)
+
+        def tamper(payload: jax.Array) -> jax.Array:
+            flat = payload.reshape(-1)
+            u = jax.lax.bitcast_convert_type(flat, jnp.uint32)
+            pos = r % max(1, u.shape[0])        # shapes are static at trace
+            bit = jnp.uint32((r >> 16) & 31)
+            u = u.at[pos].set(u[pos] ^ (jnp.uint32(1) << bit))
+            return jax.lax.bitcast_convert_type(
+                u, jnp.int32).reshape(payload.shape)
+
+        return tamper

@@ -19,7 +19,8 @@ from typing import Any
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "restore_flat", "latest_step",
+           "CheckpointManager"]
 
 
 def _leaf_paths(tree):
@@ -92,6 +93,38 @@ def restore(directory: str, step: int, tree_like: Any,
         out.append(jax.device_put(arr, shard) if shard is not None
                    else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out), manifest["metadata"]
+
+
+def restore_flat(directory: str, step: int, strict_checksum: bool = True):
+    """Load a checkpoint saved from a FLAT dict of arrays with no
+    ``tree_like`` template — the reader may not know the shape of what was
+    saved (the lineage-recovery path: a resuming query learns a snapshot's
+    columns from the snapshot itself).
+
+    Requires the writer to have recorded the key list as
+    ``metadata["keys"]`` in save order (a flat dict flattens in sorted-key
+    order).  Keeps the per-leaf CRC verification of :func:`restore`.
+    """
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    keys = manifest["metadata"].get("keys")
+    if keys is None:
+        raise ValueError(
+            f"{path}: not a flat-dict checkpoint (no metadata['keys'])")
+    if len(keys) != manifest["n_leaves"]:
+        raise ValueError(f"{path}: {len(keys)} keys vs "
+                         f"{manifest['n_leaves']} leaves")
+    out = {}
+    for key, meta in zip(keys, manifest["leaves"]):
+        fp = os.path.join(path, meta["file"])
+        if strict_checksum:
+            with open(fp, "rb") as f:
+                crc = zlib.crc32(f.read())
+            if crc != meta["crc32"]:
+                raise IOError(f"checksum mismatch in {fp}")
+        out[key] = jax.numpy.asarray(np.load(fp))
+    return out, manifest["metadata"]
 
 
 class CheckpointManager:

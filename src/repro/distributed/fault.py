@@ -1,16 +1,33 @@
 """Fault tolerance + skew mitigation for distributed queries and training.
 
-Queries: the paper's model (§2.4) — re-execution at interactive speed.  Our
-static-shape adaptation adds one structured failure mode: capacity overflow
-(a shuffle bucket, a shrink, a hash-join bucket table, a narrowed wire lane,
-or the hash-aggregation group dictionary exceeded its planned size — all
-raise ``ctx.overflow``, never assert locally).  The runner escalates the
-capacity factor and re-executes; the factor also scales the hash-join
-per-bucket capacity (``_BaseContext.bucket_cap``) AND the group-by hash
-dictionary (``relational.group_aggregate(method="hash")`` sizes it
-``groups_hint * factor``), so escalation genuinely enlarges both.
-Unstructured failures (preempted node → surfaced as an exception in a real
-deployment) get bounded retries.
+Queries: the paper's model (§2.4) — re-execution at interactive speed —
+extended with a failure TAXONOMY (:class:`repro.distributed.chaos.FailureKind`)
+so the runner reacts to what actually went wrong instead of retrying blindly:
+
+  TRANSIENT      environment fault (node loss, flaky link, timeout): retry
+                 with bounded exponential backoff (:class:`RetryPolicy`).
+  OVERFLOW       structured capacity failure (a shuffle bucket, a shrink, a
+                 hash-join bucket table, a narrowed wire lane, or the hash-
+                 aggregation dictionary exceeded its planned size — all raise
+                 ``ctx.overflow``, never assert locally): escalate the
+                 capacity factor; after a second overflow, recompile with
+                 inference dropped (no hints -> no hint-induced overflow).
+                 The factor also scales the hash-join per-bucket capacity
+                 (``_BaseContext.bucket_cap``) AND the group-by dictionary
+                 (``relational.group_aggregate(method="hash")`` sizes it
+                 ``groups_hint * factor``), so escalation genuinely enlarges
+                 both.
+  CORRUPT        a packed payload failed its wire integrity checksum
+                 (:class:`repro.core.wire.CorruptPayload`): re-run on the
+                 conservative wide format — never serve the bad buffer.
+  DETERMINISTIC  a plan-author bug (TypeError, ValueError, assertion …):
+                 raised immediately on attempt 1 — re-execution cannot fix
+                 code.
+
+Each attempt is logged in a :class:`RunReport` (failure kind, chaos cut
+point, backoff, snapshot reuse) surfaced through ``launch/report.py``; the
+seeded chaos harness (:mod:`repro.distributed.chaos`, ``REPRO_CHAOS`` env)
+drives every branch of this policy deterministically in CI.
 
 Skew: the monitor computes the paper's §3.5 statistic (per-node send/recv max
 over mean) from exchange recv-counts; the planner consults Eq. 3 to pick
@@ -22,14 +39,93 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
 
 import numpy as np
 
 from repro.core import backend as B
 from repro.core import perfmodel as pm
+from repro.core.wire import CorruptPayload
+from .chaos import ChaosInjector, FailureKind, FiredFault, TransientFault
 
-__all__ = ["QueryRunner", "RunResult", "choose_exchange"]
+__all__ = [
+    "QueryRunner", "RunResult", "RunReport", "AttemptReport", "RetryPolicy",
+    "FailureKind", "classify_failure", "choose_exchange", "skew_imbalance",
+    "salt_hot_keys",
+]
+
+
+# exception types that indicate a bug in plan/query code, not the
+# environment: re-executing is useless and masks the error — raise on
+# attempt 1 (the old catch-all burned max_attempts re-runs on these)
+_DETERMINISTIC_EXC = (TypeError, ValueError, KeyError, IndexError,
+                      AttributeError, AssertionError, NameError,
+                      ZeroDivisionError)
+
+
+def classify_failure(exc: BaseException) -> FailureKind:
+    """Map a raised exception onto the failure taxonomy.
+
+    ``CorruptPayload`` -> CORRUPT; plan-author bug types -> DETERMINISTIC;
+    everything else (``TransientFault``, OSError, timeouts, the unknown) is
+    treated as a TRANSIENT environment fault and retried — the conservative
+    default, bounded by ``RetryPolicy.max_attempts``.
+    """
+    if isinstance(exc, CorruptPayload):
+        return FailureKind.CORRUPT
+    if isinstance(exc, _DETERMINISTIC_EXC):
+        return FailureKind.DETERMINISTIC
+    return FailureKind.TRANSIENT
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retries with exponential backoff and an optional per-attempt
+    deadline.
+
+    ``deadline_s``: an attempt whose wall time exceeds it is treated as a
+    straggler — its (correct) result is discarded and the query re-executes,
+    the speculative-retry semantics of §2.4 (never applied to the final
+    attempt: a late answer beats none).
+    """
+    max_attempts: int = 4
+    backoff_s: float = 0.05       # first TRANSIENT retry waits this long
+    backoff_mult: float = 2.0     # then doubles ...
+    max_backoff_s: float = 2.0    # ... up to this cap
+    deadline_s: float | None = None
+
+    def backoff(self, transient_failures: int) -> float:
+        """Sleep before the next attempt after the n-th transient failure."""
+        return min(self.max_backoff_s,
+                   self.backoff_s * self.backoff_mult ** (transient_failures - 1))
+
+
+@dataclasses.dataclass
+class AttemptReport:
+    """One row of the per-attempt audit trail."""
+    attempt: int
+    outcome: str                  # "ok" | FailureKind value
+    wall_s: float
+    capacity_factor: float
+    wire_format: str | None
+    inference: bool
+    backoff_s: float = 0.0        # slept AFTER this attempt
+    cut: str | None = None        # chaos cut point, when injected
+    snapshots_reused: int = 0     # lineage: exchange snapshots resumed from
+    error: str = ""
+
+
+@dataclasses.dataclass
+class RunReport:
+    """Full audit of one ``QueryRunner.run``: every attempt + every fault the
+    chaos harness injected.  Rendered by ``launch/report.py --section runs``."""
+    attempts: list[AttemptReport] = dataclasses.field(default_factory=list)
+    injected: list[FiredFault] = dataclasses.field(default_factory=list)
+
+    def outcomes(self) -> list[str]:
+        return [a.outcome for a in self.attempts]
+
+    def rows(self) -> list[dict]:
+        return [dataclasses.asdict(a) for a in self.attempts]
 
 
 @dataclasses.dataclass
@@ -39,59 +135,141 @@ class RunResult:
     attempts: int
     capacity_factor: float
     wall_s: float
+    report: RunReport = dataclasses.field(default_factory=RunReport)
 
 
 class QueryRunner:
-    """Re-execution with capacity escalation (paper §2.4 fault tolerance)."""
+    """Policy-driven re-execution (paper §2.4 fault tolerance + taxonomy).
+
+    ``chaos``: a :class:`ChaosInjector` armed for every attempt (defaults to
+    the ``REPRO_CHAOS`` env leg — unset means no injection).  ``lineage``: a
+    :class:`repro.distributed.lineage.LineageStore`; when given, attempts
+    execute eagerly on the single-device engine persisting every exchange
+    boundary, so a mid-query failure resumes from the last durable exchange
+    instead of re-executing the whole plan (the distributed engine keeps the
+    paper's whole-query re-execution — snapshots cannot be written from
+    inside a compiled SPMD program).
+    """
 
     def __init__(self, db, mesh, axis: str = "data",
                  capacity_factor: float = 2.0, max_attempts: int = 4,
                  escalation: float = 2.0, packed_exchange: bool = True,
-                 join_method: str = "sorted", wire_format: str | None = None):
+                 join_method: str = "sorted", wire_format: str | None = None,
+                 policy: RetryPolicy | None = None,
+                 chaos: ChaosInjector | None = None,
+                 lineage=None):
         self.db = db
         self.mesh = mesh
         self.axis = axis
         self.capacity_factor = capacity_factor
-        self.max_attempts = max_attempts
         self.escalation = escalation
         self.packed = packed_exchange
         self.join_method = join_method
         self.wire_format = wire_format
+        self.policy = policy or RetryPolicy(max_attempts=max_attempts)
+        self.chaos = chaos if chaos is not None else ChaosInjector.from_env()
+        self.lineage = lineage
+
+    # retained for callers that introspect the runner
+    @property
+    def max_attempts(self) -> int:
+        return self.policy.max_attempts
+
+    def _attempt(self, fn, factor: float, wire_format: str | None):
+        """Execute one attempt; returns (result, stats, overflow, reused)."""
+        if self.lineage is not None:
+            from . import lineage as ln
+            return ln.run_resumable(
+                fn, self.db, self.lineage, capacity_factor=factor,
+                join_method=self.join_method, wire_format=wire_format,
+                chaos=self.chaos)
+        result, stats, overflow = B.run_distributed(
+            fn, self.db, self.mesh, self.axis, capacity_factor=factor,
+            packed_exchange=self.packed, join_method=self.join_method,
+            wire_format=wire_format, chaos=self.chaos)
+        return result, stats, overflow, 0
 
     def run(self, query_fn) -> RunResult:
+        policy = self.policy
         factor = self.capacity_factor
-        last_exc = None
+        wire_format = self.wire_format
         fn = query_fn
-        for attempt in range(1, self.max_attempts + 1):
+        report = RunReport()
+        overflow_failures = transient_failures = 0
+        t_start = time.perf_counter()
+        for attempt in range(1, policy.max_attempts + 1):
+            if self.chaos is not None:
+                self.chaos.begin_attempt(attempt)
+            inference = getattr(fn, "_infer", True) is not False
+            rep = AttemptReport(attempt=attempt, outcome="ok", wall_s=0.0,
+                                capacity_factor=factor,
+                                wire_format=wire_format, inference=inference)
+            report.attempts.append(rep)
             t0 = time.perf_counter()
             try:
-                result, stats, overflow = B.run_distributed(
-                    fn, self.db, self.mesh, self.axis,
-                    capacity_factor=factor, packed_exchange=self.packed,
-                    join_method=self.join_method,
-                    wire_format=self.wire_format)
-            except Exception as exc:   # node failure -> re-execute
-                last_exc = exc
+                result, stats, overflow, reused = self._attempt(
+                    fn, factor, wire_format)
+            except Exception as exc:
+                rep.wall_s = time.perf_counter() - t0
+                rep.error = f"{type(exc).__name__}: {exc}"
+                kind = classify_failure(exc)
+                rep.outcome = kind.value
+                self._note_injected(report)
+                if kind is FailureKind.DETERMINISTIC:
+                    raise            # a bug: surface on attempt 1, no retries
+                if attempt >= policy.max_attempts:
+                    raise
+                if kind is FailureKind.CORRUPT:
+                    # never trust the failed buffer: conservative format
+                    wire_format = "wide"
+                else:                # TRANSIENT: bounded backoff
+                    transient_failures += 1
+                    rep.backoff_s = policy.backoff(transient_failures)
+                    time.sleep(rep.backoff_s)
                 continue
-            wall = time.perf_counter() - t0
-            if not overflow:
-                return RunResult(result, stats, attempt, factor, wall)
-            factor *= self.escalation   # structured failure: bigger buffers
-            if attempt >= 2 and hasattr(query_fn, "with_inference"):
-                # capacity escalation cannot fix a groups_hint that undercounts
-                # the true distinct groups (a plan-author claim like Q13's, or
-                # hints analyzed against stand-in metadata) NOR a lying wire
-                # bound tripping the narrow-lane range check: after one failed
-                # escalation, recompile the plan with no hints at all — the
-                # conservative program has no hint-induced overflow left
-                # (hash-dictionary group-bys degrade to the single-sort path)
-                # and, with no bounds, every exchange ships at full width
-                fn = query_fn.with_inference(False)
-        if last_exc is not None:
-            raise last_exc
+            rep.wall_s = time.perf_counter() - t0
+            rep.snapshots_reused = reused
+            self._note_injected(report)
+            if overflow:
+                rep.outcome = FailureKind.OVERFLOW.value
+                if attempt >= policy.max_attempts:
+                    break
+                factor *= self.escalation   # bigger buffers on re-execution
+                overflow_failures += 1
+                if overflow_failures >= 2 and \
+                        hasattr(query_fn, "with_inference"):
+                    # capacity escalation cannot fix a groups_hint that
+                    # undercounts the true distinct groups (a plan-author
+                    # claim like Q13's, or hints analyzed against stand-in
+                    # metadata) NOR a lying wire bound tripping the narrow-
+                    # lane range check: after one failed escalation,
+                    # recompile with no hints at all — the conservative
+                    # program has no hint-induced overflow left (hash-
+                    # dictionary group-bys degrade to the single-sort path)
+                    # and, with no bounds, every exchange ships at full width
+                    fn = query_fn.with_inference(False)
+                continue
+            if policy.deadline_s is not None and \
+                    rep.wall_s > policy.deadline_s and \
+                    attempt < policy.max_attempts:
+                # straggler: correct but late — speculative re-execution
+                rep.outcome = FailureKind.TRANSIENT.value
+                rep.error = (f"deadline {policy.deadline_s:.3f}s exceeded "
+                             f"({rep.wall_s:.3f}s)")
+                continue
+            return RunResult(result, stats, attempt, factor,
+                             time.perf_counter() - t_start, report)
         raise RuntimeError(
             f"query overflowed at capacity_factor={factor:.1f} "
-            f"after {self.max_attempts} attempts")
+            f"after {policy.max_attempts} attempts")
+
+    def _note_injected(self, report: RunReport) -> None:
+        if self.chaos is not None:
+            new = self.chaos.events[len(report.injected):]
+            report.injected.extend(new)
+            # attribute the injection's cut point to the current attempt row
+            if new and report.attempts:
+                report.attempts[-1].cut = new[-1].cut
 
 
 def choose_exchange(cluster: pm.ClusterSpec, v: int, small_bytes: float,
@@ -102,10 +280,27 @@ def choose_exchange(cluster: pm.ClusterSpec, v: int, small_bytes: float,
 
 
 def skew_imbalance(recv_counts: np.ndarray, k: int = 1) -> float:
-    """Paper §3.5: max over nodes / mean (k devices per node)."""
-    v = len(recv_counts) // k
+    """Paper §3.5: max over nodes / mean (k devices per node).
+
+    Validates the shape up front (a ragged ``len(recv_counts) % k`` used to
+    surface as an opaque numpy reshape error) and returns the neutral 1.0
+    for the empty / single-node edge instead of dividing by a clamped mean.
+    """
+    recv_counts = np.asarray(recv_counts)
+    if k < 1:
+        raise ValueError(f"devices-per-node k must be >= 1, got {k}")
+    if recv_counts.size % k != 0:
+        raise ValueError(
+            f"recv_counts has {recv_counts.size} entries, not divisible by "
+            f"k={k} devices per node")
+    v = recv_counts.size // k
+    if v <= 1:
+        return 1.0   # nothing to be imbalanced against
     per_node = recv_counts.reshape(v, k).sum(axis=1)
-    return float(per_node.max() / max(per_node.mean(), 1e-9))
+    mean = per_node.mean()
+    if mean == 0:
+        return 1.0   # no traffic at all
+    return float(per_node.max() / mean)
 
 
 def salt_hot_keys(keys: np.ndarray, n_partitions: int,

@@ -1,0 +1,159 @@
+"""Exchange-boundary lineage snapshots — resume instead of re-execute.
+
+The paper's recovery story is whole-query re-execution (§2.4).  The exchange
+cut points are exactly the replicated / reshuffled states of a plan — the
+same observation "Rethinking Analytical Processing in the GPU Era" uses for
+out-of-core restartability — so a runner that persists each post-exchange
+table can resume a failed query from the last durable exchange, re-executing
+only the plan suffix.
+
+Mechanics: the planner executor (:class:`repro.core.planner._Executor`)
+consults an attached :class:`LineageStore` at every exchange-type node
+(Shuffle, Broadcast, GroupBy with a non-local exchange) BEFORE recursing
+into its children.  A hit returns the snapshot and skips the whole subtree
+— the executor walks root-ward, so the topmost durable exchange wins.  A
+miss executes the node and persists its output through
+:mod:`repro.distributed.checkpoint`'s atomic, CRC-checksummed save.
+
+Snapshots are only meaningful for EAGER single-device execution
+(``run_local(jit=False)``): inside a jit trace the values are Tracers and
+host I/O is impossible — the distributed engine keeps the paper's
+whole-query re-execution.  Snapshot tags are the node's ordinal in the
+deterministic ``walk()`` order; every snapshot records the (plan
+fingerprint, inference leg, wire format) configuration and is ignored when
+the resuming run's configuration differs — a hint-dropped or wide-format
+re-run never resumes from a narrow-format snapshot.  Snapshots are never
+written while ``ctx.overflow`` is set: an overflowed buffer is not durable
+state.
+
+``benchmarks/bench_recovery.py`` gates the payoff: resuming a query that
+failed at ``finalize`` must cost < ``MAX_RECOVERY_RATIO`` x the full
+re-execution.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as B
+from repro.core import relational as rel
+from repro.core.table import Table, to_numpy
+from repro.core.wire import CorruptPayload
+from . import checkpoint as ckpt
+
+__all__ = ["LineageStore", "run_resumable", "plan_fingerprint"]
+
+
+def plan_fingerprint(nodes) -> int:
+    """Stable fingerprint of a plan's node-type sequence (walk order) —
+    keeps one store directory from serving another query's snapshots."""
+    return zlib.crc32(" ".join(type(n).__name__ for n in nodes).encode())
+
+
+def _is_traced(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+class LineageStore:
+    """Durable post-exchange tables, keyed by plan-walk ordinal.
+
+    One directory per query; each snapshot is a ``checkpoint`` step whose
+    flat dict holds the table columns plus ``__count`` / ``__valid``.
+    ``reused`` counts snapshot hits since the last :meth:`begin_plan` —
+    surfaced as ``snapshots_reused`` in the fault runner's RunReport.
+    """
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        self.config: dict = {}
+        self.reused = 0
+        self.saved = 0
+
+    # -- lifecycle ----------------------------------------------------------
+    def begin_plan(self, config: dict) -> None:
+        """Pins the configuration that snapshots written/read during this
+        run must carry — snapshots from another leg are ignored, not mixed."""
+        self.config = dict(config)
+        self.reused = 0
+        self.saved = 0
+
+    def begin_executor(self, nodes, inference: bool,
+                       wire_format: str | None) -> None:
+        """Called by ``planner._Executor.run`` (duck-typed: the core layer
+        never imports this module) with the plan's walk order and the run's
+        configuration legs."""
+        self.begin_plan({"plan": plan_fingerprint(nodes),
+                         "inference": bool(inference),
+                         "wire_format": wire_format})
+
+    def clear(self) -> None:
+        shutil.rmtree(self.dir, ignore_errors=True)
+
+    # -- executor interface -------------------------------------------------
+    def load(self, tag: int):
+        """Snapshot for plan node ``tag`` under the pinned config, or None."""
+        path = os.path.join(self.dir, f"step_{tag:010d}")
+        if not os.path.isdir(path):
+            return None
+        try:
+            flat, meta = ckpt.restore_flat(self.dir, tag)
+        except (IOError, ValueError, OSError):
+            return None          # torn/foreign snapshot: fall back to re-exec
+        if meta.get("config") != self.config:
+            return None          # other leg (inference/wire/plan): not ours
+        count = flat.pop("__count").reshape(()).astype(jnp.int32)
+        valid = flat.pop("__valid", None)
+        self.reused += 1
+        return Table(flat, count, valid)
+
+    def save(self, tag: int, table, ctx) -> None:
+        """Persist a post-exchange table — only when it is durable state:
+        concrete (not a Tracer: eager execution only) and overflow-free."""
+        if not isinstance(table, Table):
+            return
+        leaves = list(table.columns.values()) + [table.count]
+        if any(_is_traced(v) for v in leaves) or _is_traced(table.valid):
+            return               # under jit: snapshots are a no-op
+        if bool(ctx.overflow):
+            return               # overflowed state is not durable
+        flat = {name: np.asarray(v) for name, v in table.columns.items()}
+        flat["__count"] = np.asarray(table.count)
+        if table.valid is not None:
+            flat["__valid"] = np.asarray(table.valid)
+        ckpt.save(self.dir, tag, flat,
+                  metadata={"keys": sorted(flat), "config": self.config})
+        self.saved += 1
+
+
+def run_resumable(query_fn, db, store: LineageStore,
+                  capacity_factor: float = 2.0, join_method: str = "sorted",
+                  use_kernel: bool | None = None,
+                  wire_format: str | None = None, chaos=None,
+                  ) -> tuple[dict, B.PlanStats, bool, int]:
+    """One eager single-device attempt with lineage snapshots armed.
+
+    Returns ``(result, stats, overflow, snapshots_reused)`` — the fault
+    runner's attempt signature.  A payload integrity failure raises
+    :class:`CorruptPayload` exactly like the drivers in ``core.backend``.
+    A resumed attempt's PlanStats cover only the re-executed suffix (skipped
+    subtrees issue no exchanges).
+    """
+    tables = B._np_db_to_tables(db)
+    ctx = B.LocalContext(db, tables, capacity_factor=capacity_factor,
+                         join_method=join_method, use_kernel=use_kernel,
+                         wire_format=wire_format)
+    ctx.chaos = chaos
+    ctx.lineage = store
+    out = query_fn(ctx)
+    if isinstance(out, dict):
+        out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
+                    jnp.asarray(1, jnp.int32))
+    out = rel.ensure_compact(out)
+    if bool(ctx.corrupt):
+        raise CorruptPayload("resumable run: payload integrity check failed")
+    return (to_numpy(out), ctx.stats, bool(ctx.overflow), store.reused)

@@ -1,17 +1,22 @@
 """Reduce results/dryrun/*.json into the EXPERIMENTS.md §Dry-run/§Roofline
-tables (markdown on stdout).
+tables, and results/runs/*.json (fault-runner RunReports) into the
+per-attempt audit table (markdown on stdout).
 
     PYTHONPATH=src python -m repro.launch.report [--mesh 16x16]
+    PYTHONPATH=src python -m repro.launch.report --section runs
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import glob
 import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "results", "dryrun")
+RUNS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                    "results", "runs")
 
 
 def fmt_bytes(b):
@@ -91,13 +96,48 @@ def dryrun_table(recs):
               f"| {fmt_bytes(mem.get('argument_bytes'))} |")
 
 
+def run_report_record(query, report) -> dict:
+    """JSON-able record of one ``QueryRunner.run`` audit trail
+    (:class:`repro.distributed.fault.RunReport`) for results/runs/."""
+    return {"query": str(query), "attempts": report.rows(),
+            "injected": [dataclasses.asdict(f) for f in report.injected]}
+
+
+def load_runs():
+    return [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(RUNS, "*.json")))]
+
+
+def run_report_table(recs):
+    """Per-attempt audit of fault-runner executions: what failed, where the
+    chaos harness injected it, and how the policy recovered."""
+    print("| query | attempt | outcome | cut | factor | wire | inference |"
+          " wall | backoff | snapshots | error |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        for a in r.get("attempts", []):
+            print(f"| {r.get('query', '?')} | {a['attempt']} "
+                  f"| {a['outcome']} "
+                  f"| {a.get('cut') or '-'} "
+                  f"| {a['capacity_factor']:.2f} "
+                  f"| {a.get('wire_format') or 'env'} "
+                  f"| {'on' if a.get('inference', True) else 'off'} "
+                  f"| {a['wall_s'] * 1e3:.0f}ms "
+                  f"| {a['backoff_s'] * 1e3:.0f}ms "
+                  f"| {a.get('snapshots_reused', 0)} "
+                  f"| {a.get('error', '')[:40]} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--tag", default="")
     ap.add_argument("--section", default="roofline",
-                    choices=["roofline", "dryrun"])
+                    choices=["roofline", "dryrun", "runs"])
     args = ap.parse_args()
+    if args.section == "runs":
+        run_report_table(load_runs())
+        return
     recs = load(args.mesh, args.tag)
     if args.section == "roofline":
         roofline_table(recs)
