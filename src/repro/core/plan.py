@@ -51,7 +51,7 @@ __all__ = [
     # expressions
     "Expr", "Col", "Lit", "BinOp", "NotE", "Cast", "Where", "Year",
     "AlphaRank", "Like", "StartsWith", "EndsWith", "InSet", "CodeLit",
-    "DbScale", "ScalarRef",
+    "DbScale", "ScalarRef", "Param",
     # nodes
     "Node", "LogicalTable", "Scan", "Filter", "Select", "WithCol", "Rename",
     "Join", "Semi", "Anti", "Left", "GroupBy", "AggScalar", "Shuffle",
@@ -59,6 +59,7 @@ __all__ = [
     # builder helpers
     "scan", "col", "lit", "scode", "isin", "like", "starts_with",
     "ends_with", "alpha_rank", "year", "where", "db_scale", "result",
+    "param",
 ]
 
 
@@ -194,6 +195,54 @@ class ScalarRef(Expr):
     """One named scalar out of an :class:`AggScalar` node's result."""
     def __init__(self, node: "AggScalar", name: str):
         self.node, self.name = node, name
+
+
+class Param(Expr):
+    """Named runtime parameter of a plan *template*.
+
+    A plan containing ``Param`` nodes is a TEMPLATE: one logical DAG (and one
+    jit trace, through ``repro.serve``) serves every parameter binding.  The
+    placeholder carries its DOMAIN, not a value:
+
+      * ``lo`` / ``hi`` declare the closed interval every future binding must
+        fall in.  The planner folds the **domain** — never any single binding
+        — into filter refinement, ``key_bits`` and wire bounds, so a cached
+        ``PlanInfo`` (and any compiled program derived from it) is sound for
+        every admissible binding.  Bindings outside the domain are rejected
+        host-side at bind time (``serve.PlanTemplate.bind``); anything that
+        slips past stale statistics still trips the engine's runtime range
+        checks into ``ctx.overflow`` — never a silent wrong answer.
+      * ``default`` serves when a binding omits the parameter.
+      * ``dtype`` ("int64" / "float64") pins the traced scalar's dtype so
+        re-binding never re-traces a compiled template; inferred from
+        ``lo``/``hi``/``default`` when omitted (float anywhere -> float64).
+
+    Domainless parameters are allowed and simply contribute no provable
+    bounds (filters over them refine nothing — the conservative, always-sound
+    degradation).
+    """
+
+    def __init__(self, name: str, lo=None, hi=None, default=None,
+                 dtype: str | None = None):
+        if not isinstance(name, str) or not name:
+            raise ValueError("param: name must be a non-empty string")
+        if (lo is None) != (hi is None):
+            raise ValueError(f"param {name!r}: declare both lo and hi, "
+                             f"or neither")
+        if lo is not None and lo > hi:
+            raise ValueError(f"param {name!r}: empty domain [{lo}, {hi}]")
+        self.name, self.lo, self.hi, self.default = name, lo, hi, default
+        if dtype is None:
+            probe = [v for v in (lo, hi, default) if v is not None]
+            dtype = "float64" if any(isinstance(v, float) for v in probe) \
+                else "int64"
+        if dtype not in ("int64", "float64"):
+            raise ValueError(f"param {name!r}: unsupported dtype {dtype!r}")
+        self.dtype = dtype
+
+    def spec(self) -> tuple:
+        """Identity tuple: two placeholders with one name must agree on it."""
+        return (self.name, self.lo, self.hi, self.default, self.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -458,6 +507,13 @@ def where(cond, a, b) -> Where:
 
 def db_scale() -> DbScale:
     return DbScale()
+
+
+def param(name: str, lo=None, hi=None, default=None,
+          dtype: str | None = None) -> Param:
+    """Template parameter placeholder with an optional provable domain:
+    ``param("cutoff", lo=days("1998-08-03"), hi=days("1998-10-02"))``."""
+    return Param(name, lo=lo, hi=hi, default=default, dtype=dtype)
 
 
 def result(**exprs) -> ScalarResult:

@@ -67,6 +67,7 @@ runs legs with each forced.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 import os
 from typing import Any, Callable
@@ -78,8 +79,9 @@ from . import plan as P
 __all__ = [
     "ColStats", "PlanInfo", "CompiledQuery",
     "analyze", "column_stats", "compile_query", "invalidate_stats",
-    "planner_default", "static_plan_stats", "static_wire_stats",
-    "stats_override", "validate",
+    "params_of", "plan_signature", "planner_default",
+    "register_invalidation", "static_plan_stats", "static_wire_stats",
+    "stats_override", "subplan_signatures", "validate",
 ]
 
 REPL = "replicated"          # partitioning lattice: REPL | tuple(cols) | None
@@ -168,6 +170,33 @@ def _const(e: P.Expr, db):
     return None
 
 
+def _const_range(e: P.Expr, db):
+    """Resolve an expression of host constants AND domained parameters to the
+    closed interval ``(lo, hi)`` of values it can take over every admissible
+    binding; ``None`` when unbounded.  A plain constant resolves to the
+    degenerate interval ``(c, c)``, so template-free plans refine exactly as
+    before — and a :class:`P.Param` contributes its declared domain, which is
+    what makes one cached ``PlanInfo`` sound for every binding."""
+    if isinstance(e, P.Param):
+        return None if e.lo is None else (e.lo, e.hi)
+    c = _const(e, db)
+    if c is not None:
+        return (c, c)
+    if isinstance(e, P.Cast):
+        return _const_range(e.a, db)
+    if isinstance(e, P.BinOp) and e.op in ("+", "-", "*"):
+        a, b = _const_range(e.a, db), _const_range(e.b, db)
+        if a is None or b is None:
+            return None
+        if e.op == "+":
+            return (a[0] + b[0], a[1] + b[1])
+        if e.op == "-":
+            return (a[0] - b[1], a[1] - b[0])
+        prods = [a[0] * b[0], a[0] * b[1], a[1] * b[0], a[1] * b[1]]
+        return (min(prods), max(prods))
+    return None
+
+
 def _mul_interval(a: ColStats, b: ColStats) -> tuple[int, int]:
     prods = [a.lo * b.lo, a.lo * b.hi, a.hi * b.lo, a.hi * b.hi]
     return min(prods), max(prods)
@@ -190,6 +219,13 @@ def _expr_stats(e: P.Expr, schema: dict[str, ColStats], db) -> ColStats:
     if isinstance(e, P.CodeLit):
         c = db.code(e.col, e.value)
         return ColStats(c, c, 1)
+    if isinstance(e, P.Param):
+        # a template parameter is bounded by its declared DOMAIN (one value
+        # per binding, any value across bindings) — never by any binding
+        if e.dtype == "int64" and e.lo is not None:
+            return ColStats(int(math.ceil(e.lo)), int(math.floor(e.hi)),
+                            1).clamped()
+        return _UNKNOWN
     if isinstance(e, P.Cast):
         return _expr_stats(e.a, schema, db)
     if isinstance(e, P.BinOp) and e.op in ("+", "-", "*"):
@@ -228,7 +264,13 @@ _FLIP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "==": "=="}
 
 def _refine_filter(pred: P.Expr, schema: dict[str, ColStats], db
                    ) -> dict[str, ColStats]:
-    """Tighten column bounds through the conjuncts of a filter predicate."""
+    """Tighten column bounds through the conjuncts of a filter predicate.
+
+    Comparisons against host constants AND against domained template
+    parameters refine — the latter by the WEAKEST bound over the parameter
+    domain (``v <= p`` keeps rows up to the domain's hi, ``v >= p`` down to
+    its lo), so the refinement is sound for every binding the template
+    admits, not just one literal."""
     out = dict(schema)
 
     def _mn(a, b):
@@ -237,21 +279,31 @@ def _refine_filter(pred: P.Expr, schema: dict[str, ColStats], db
     def _mx(a, b):
         return b if a is None else (a if b is None else max(a, b))
 
-    def apply(name: str, op: str, c):
+    def _num(v) -> bool:
+        return isinstance(v, (int, float, np.number)) and \
+            not isinstance(v, bool)
+
+    def apply(name: str, op: str, rng):
         s = out.get(name)
-        if s is None or not isinstance(c, (int, float, np.number)):
+        if s is None or rng is None or not (_num(rng[0]) and _num(rng[1])):
             return
+        clo, chi = rng
         lo, hi, card = s.lo, s.hi, s.card
-        if op == "<=":
-            hi = _mn(hi, math.floor(c))
+        if op == "<=":                       # v <= c, c anywhere in [clo,chi]
+            hi = _mn(hi, math.floor(chi))
         elif op == "<":
-            hi = _mn(hi, math.ceil(c) - 1)
+            hi = _mn(hi, math.ceil(chi) - 1)
         elif op == ">=":
-            lo = _mx(lo, math.ceil(c))
+            lo = _mx(lo, math.ceil(clo))
         elif op == ">":
-            lo = _mx(lo, math.floor(c) + 1)
-        elif op == "==" and _is_int(c):
-            lo, hi, card = _mx(lo, int(c)), _mn(hi, int(c)), 1
+            lo = _mx(lo, math.floor(clo) + 1)
+        elif op == "==":
+            # v equals SOME value in [clo, chi]: both ends clamp; the
+            # surviving width bounds the distinct count (1 for a constant)
+            lo = _mx(lo, math.ceil(clo))
+            hi = _mn(hi, math.floor(chi))
+            if lo is not None and hi is not None:
+                card = _mn(card, max(1, hi - lo + 1))
         out[name] = ColStats(lo, hi, card).clamped()
 
     def visit(e):
@@ -261,13 +313,9 @@ def _refine_filter(pred: P.Expr, schema: dict[str, ColStats], db
             return
         if isinstance(e, P.BinOp) and e.op in _FLIP:
             if isinstance(e.a, P.Col):
-                c = _const(e.b, db)
-                if c is not None:
-                    apply(e.a.name, e.op, c)
+                apply(e.a.name, e.op, _const_range(e.b, db))
             elif isinstance(e.b, P.Col):
-                c = _const(e.a, db)
-                if c is not None:
-                    apply(e.b.name, _FLIP[e.op], c)
+                apply(e.b.name, _FLIP[e.op], _const_range(e.a, db))
             return
         if isinstance(e, P.InSet) and isinstance(e.a, P.Col):
             vals = [_const(v, db) for v in e.values]
@@ -366,6 +414,200 @@ def static_plan_stats(root: P.Node) -> dict[str, int]:
 
 
 # ---------------------------------------------------------------------------
+# content plan signatures (compiled-plan cache keys + lineage fingerprints)
+# ---------------------------------------------------------------------------
+
+def _expr_sig(e: P.Expr, nsig) -> str:
+    """Canonical serialization of an expression tree.  ``nsig(node)`` resolves
+    an embedded scalar sub-query (:class:`P.ScalarRef`) to a stable string."""
+    if isinstance(e, P.Col):
+        return f"c:{e.name}"
+    if isinstance(e, P.Lit):
+        return f"l:{e.value!r}"
+    if isinstance(e, P.CodeLit):
+        return f"sc:{e.col}={e.value!r}"
+    if isinstance(e, P.DbScale):
+        return "dbscale"
+    if isinstance(e, P.Param):
+        return f"prm:{e.spec()!r}"
+    if isinstance(e, P.ScalarRef):
+        return f"sq:{nsig(e.node)}[{e.name}]"
+    if isinstance(e, P.BinOp):
+        return f"({_expr_sig(e.a, nsig)}{e.op}{_expr_sig(e.b, nsig)})"
+    if isinstance(e, P.NotE):
+        return f"~({_expr_sig(e.a, nsig)})"
+    if isinstance(e, P.Cast):
+        return f"cast[{e.dtype}]({_expr_sig(e.a, nsig)})"
+    if isinstance(e, P.Where):
+        return (f"where({_expr_sig(e.cond, nsig)},{_expr_sig(e.a, nsig)},"
+                f"{_expr_sig(e.b, nsig)})")
+    if isinstance(e, P.Year):
+        return f"year({_expr_sig(e.a, nsig)})"
+    if isinstance(e, P.AlphaRank):
+        return f"rank:{e.col}"
+    if isinstance(e, P.Like):
+        return f"like:{e.col}~{e.subs!r}"
+    if isinstance(e, P.StartsWith):
+        return f"pre:{e.col}~{e.prefix!r}"
+    if isinstance(e, P.EndsWith):
+        return f"suf:{e.col}~{e.suffix!r}"
+    if isinstance(e, P.InSet):
+        vals = ",".join(_expr_sig(v, nsig) for v in e.values)
+        return f"in({_expr_sig(e.a, nsig)};{vals})"
+    raise TypeError(f"cannot serialize {type(e).__name__}")
+
+
+def _aggs_sig(aggs, nsig) -> str:
+    parts = []
+    for name, op, v in aggs:
+        if v is None:
+            vs = "-"
+        elif isinstance(v, str):
+            vs = f"c:{v}"
+        else:
+            vs = _expr_sig(v, nsig)
+        parts.append(f"{name}={op}({vs})")
+    return ",".join(parts)
+
+
+def _node_sig(n: P.Node, nsig) -> str:
+    """One node's own content (type + every semantic attribute + expression
+    trees); children/sub-queries are referenced through ``nsig``, never
+    inlined, so the caller chooses identity- or content-addressing."""
+    t = type(n).__name__
+    if isinstance(n, P.Scan):
+        return f"{t}:{n.table}"
+    if isinstance(n, P.Filter):
+        return f"{t}:{_expr_sig(n.pred, nsig)}"
+    if isinstance(n, P.Select):
+        return f"{t}:{','.join(n.names)}"
+    if isinstance(n, P.WithCol):
+        # insertion order kept: a later expr may read an earlier new column
+        inner = ",".join(f"{k}={_expr_sig(e, nsig)}"
+                         for k, e in n.exprs.items())
+        return f"{t}:{inner}"
+    if isinstance(n, P.Rename):
+        return f"{t}:{sorted(n.mapping.items())!r}"
+    if isinstance(n, P.Left):
+        return (f"{t}:on={n.on!r}/{n.build_on!r}:take={n.take!r}"
+                f":def={sorted(n.defaults.items())!r}")
+    if isinstance(n, P.Join):
+        return f"{t}:on={n.on!r}/{n.build_on!r}:take={n.take!r}"
+    if isinstance(n, (P.Semi, P.Anti)):
+        return f"{t}:on={n.on!r}/{n.build_on!r}"
+    if isinstance(n, P.GroupBy):
+        return (f"{t}:keys={list(n.keys)!r}:aggs={_aggs_sig(n.aggs, nsig)}"
+                f":x={n.exchange}:final={n.final}:gh={n.groups_hint}")
+    if isinstance(n, P.AggScalar):
+        return f"{t}:aggs={_aggs_sig(n.aggs, nsig)}"
+    if isinstance(n, P.Shuffle):
+        return f"{t}:{n.key}"
+    if isinstance(n, P.Broadcast):
+        return f"{t}:p2p={n.p2p}"
+    if isinstance(n, P.Shrink):
+        return f"{t}:{n.cap}"
+    if isinstance(n, P.Finalize):
+        return (f"{t}:sort={n.sort_keys!r}:limit={n.limit}"
+                f":repl={n.replicated}")
+    if isinstance(n, P.ScalarResult):
+        inner = ",".join(f"{k}={_expr_sig(e, nsig)}"
+                         for k, e in n.exprs.items())
+        return f"{t}:{inner}"
+    raise TypeError(f"cannot serialize {t}")
+
+
+def plan_signature(root: P.Node) -> str:
+    """CONTENT signature of a plan: every node in deterministic ``walk``
+    order — type, semantic attributes, expression trees (parameters by their
+    full spec, never a binding) — plus the exact child/sub-query wiring by
+    walk ordinal.  Two plans share a signature iff they are the same logical
+    program, so it is the key material for the compiled-plan cache and (with
+    the bindings appended) the lineage fingerprint; same-shaped plans with
+    different columns, keys, literals or DAG sharing all diverge — the
+    collision class of the old type-name-only fingerprint."""
+    return _walk_signature(walk(root))
+
+
+def _walk_signature(nodes) -> str:
+    """:func:`plan_signature` body over an already-walked node list — shared
+    with :func:`repro.distributed.lineage.plan_fingerprint`, which receives
+    the executor's walk order rather than a root."""
+    ordinal = {id(n): i for i, n in enumerate(nodes)}
+
+    def nsig(m):
+        return f"#{ordinal[id(m)]}"
+
+    parts = []
+    for i, n in enumerate(nodes):
+        kids = ",".join(f"#{ordinal[id(c)]}" for c in n.children)
+        parts.append(f"{i}={_node_sig(n, nsig)}<-[{kids}]")
+    return ";".join(parts)
+
+
+def subplan_signatures(root: P.Node) -> dict[int, tuple[str, frozenset]]:
+    """Per-node ``id -> (subtree content hash, reachable parameter names)``.
+
+    The hash content-addresses the whole SUBTREE (scalar sub-queries
+    inlined), so two queries in a batch that share a logical subplan — same
+    scan, same filtered fragment — hash alike even when built as distinct
+    objects: the serving batch executor's cross-query memo keys on it.  The
+    parameter set names which bindings the subtree's result can depend on, so
+    the memo key only includes the bindings that matter."""
+    memo: dict[int, tuple[str, frozenset]] = {}
+
+    def expr_params(e: P.Expr, acc: set):
+        if isinstance(e, P.Param):
+            acc.add(e.name)
+        elif isinstance(e, P.ScalarRef):
+            acc.update(sub(e.node)[1])
+        for ch in _expr_children(e):
+            expr_params(ch, acc)
+
+    def sub(n: P.Node) -> tuple[str, frozenset]:
+        got = memo.get(id(n))
+        if got is not None:
+            return got
+        local = _node_sig(n, lambda m: sub(m)[0])
+        pnames: set = set()
+        for e in _node_exprs(n):
+            expr_params(e, pnames)
+        kids = [sub(ch) for ch in n.children]
+        text = local + "|" + ",".join(h for h, _ in kids)
+        for _h, ps in kids:
+            pnames.update(ps)
+        out = (hashlib.blake2b(text.encode(), digest_size=16).hexdigest(),
+               frozenset(pnames))
+        memo[id(n)] = out
+        return out
+
+    sub(root)
+    return memo
+
+
+def params_of(root: P.Node) -> dict[str, P.Param]:
+    """Every parameter placeholder reachable from ``root``, by name.  Two
+    placeholders sharing a name must agree on the full spec (domain, default,
+    dtype) — a conflict is an authoring error, raised here."""
+    out: dict[str, P.Param] = {}
+
+    def visit_expr(e: P.Expr):
+        if isinstance(e, P.Param):
+            prev = out.get(e.name)
+            if prev is not None and prev.spec() != e.spec():
+                raise ValueError(
+                    f"param {e.name!r}: conflicting declarations "
+                    f"{prev.spec()} vs {e.spec()}")
+            out[e.name] = e
+        for ch in _expr_children(e):
+            visit_expr(ch)
+
+    for n in walk(root):
+        for e in _node_exprs(n):
+            visit_expr(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # static wire-byte derivation (dtype propagation over the IR, no execution)
 # ---------------------------------------------------------------------------
 
@@ -429,6 +671,8 @@ class _DtypeWalker:
             return self.db.code(e.col, e.value)
         if isinstance(e, P.DbScale):
             return self.db.scale
+        if isinstance(e, P.Param):
+            return np.dtype(e.dtype)     # pinned: re-binding never re-types
         if isinstance(e, P.Cast):
             return np.dtype(e.dtype)
         if isinstance(e, P.ScalarRef):
@@ -896,9 +1140,11 @@ class _Executor:
     miss executes the node and persists its output.  Tags are the node's
     ordinal in the deterministic ``walk()`` order."""
 
-    def __init__(self, ctx, info: PlanInfo | None):
+    def __init__(self, ctx, info: PlanInfo | None,
+                 params: dict[str, Any] | None = None):
         self.ctx = ctx
         self.info = info
+        self.params = params or {}
         self.memo: dict[int, Any] = {}
         self._tags: dict[int, int] = {}
 
@@ -908,7 +1154,8 @@ class _Executor:
             nodes = walk(node)
             self._tags = {id(n): i for i, n in enumerate(nodes)}
             store.begin_executor(nodes, self.info is not None,
-                                 getattr(self.ctx, "wire_format", None))
+                                 getattr(self.ctx, "wire_format", None),
+                                 bindings=self.params)
         return self._exec(node)
 
     def _wire(self, node: P.Node):
@@ -930,6 +1177,13 @@ class _Executor:
             return ctx.db.code(e.col, e.value)
         if isinstance(e, P.DbScale):
             return ctx.db.scale
+        if isinstance(e, P.Param):
+            if e.name in self.params:
+                return self.params[e.name]
+            if e.default is not None:
+                return e.default
+            raise ValueError(f"unbound parameter {e.name!r} (no binding, "
+                             "no default)")
         if isinstance(e, P.ScalarRef):
             return self._exec(e.node)[e.name]
         if isinstance(e, P.BinOp):
@@ -1106,11 +1360,24 @@ class CompiledQuery:
     def __call__(self, ctx):
         return self.run(ctx)
 
-    def run(self, ctx, infer: bool | None = None):
+    def run(self, ctx, infer: bool | None = None,
+            params: dict[str, Any] | None = None):
         if infer is None:
             infer = planner_default()
         info = self.info(ctx.db) if infer else None
-        return _Executor(ctx, info).run(self.plan)
+        return _Executor(ctx, info, params=params).run(self.plan)
+
+    def signature(self) -> str:
+        """Content signature (:func:`plan_signature`) — cached: plans are
+        immutable once built."""
+        sig = self.__dict__.get("_signature")
+        if sig is None:
+            sig = self.__dict__["_signature"] = plan_signature(self.plan)
+        return sig
+
+    def params(self) -> dict[str, P.Param]:
+        """Parameter placeholders of the plan (empty for literal queries)."""
+        return params_of(self.plan)
 
     def with_inference(self, on: bool) -> "_PinnedQuery":
         """A ``query_fn(ctx)`` with the inference mode pinned (env-proof).
@@ -1193,12 +1460,27 @@ def compile_query(build_fn: Callable[[], P.Node],
 # statistics-cache ownership (the only module that may touch these keys)
 # ---------------------------------------------------------------------------
 
+_INVALIDATION_HOOKS: list[Callable[[Any], None]] = []
+
+
+def register_invalidation(hook: Callable[[Any], None]) -> None:
+    """Register ``hook(db)`` to fire whenever :func:`invalidate_stats` drops
+    a database's planner caches — the ONE doorway every stats-dependent cache
+    above the planner (compiled-plan caches, serving templates) hangs off,
+    so table mutation and ``stats_override`` entry/exit evict everywhere at
+    once.  Idempotent per hook object; hooks must tolerate any ``db``."""
+    if hook not in _INVALIDATION_HOOKS:
+        _INVALIDATION_HOOKS.append(hook)
+
+
 def invalidate_stats(db) -> None:
-    """Drop the planner's caches on ``db`` (column stats + per-plan infos).
-    For callers that mutate the database's tables, or benchmarks timing cold
-    inference."""
+    """Drop the planner's caches on ``db`` (column stats + per-plan infos),
+    then fire every registered invalidation hook.  For callers that mutate
+    the database's tables, or benchmarks timing cold inference."""
     db.__dict__.pop("_plan_colstats", None)
     db.__dict__.pop("_planinfo_cache", None)
+    for hook in list(_INVALIDATION_HOOKS):
+        hook(db)
 
 
 class stats_override:

@@ -32,9 +32,9 @@ re-execution.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import shutil
-import zlib
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core import backend as B
 from repro.core import relational as rel
+from repro.core.planner import _walk_signature
 from repro.core.table import Table, to_numpy
 from repro.core.wire import CorruptPayload
 from . import checkpoint as ckpt
@@ -49,10 +50,40 @@ from . import checkpoint as ckpt
 __all__ = ["LineageStore", "run_resumable", "plan_fingerprint"]
 
 
-def plan_fingerprint(nodes) -> int:
-    """Stable fingerprint of a plan's node-type sequence (walk order) —
-    keeps one store directory from serving another query's snapshots."""
-    return zlib.crc32(" ".join(type(n).__name__ for n in nodes).encode())
+def _canon_binding(v):
+    """Host-canonical form of one parameter binding for fingerprinting —
+    numpy/jax scalars and python numbers of equal value must agree."""
+    if isinstance(v, bool):
+        return repr(v)
+    if isinstance(v, (int, np.integer)):
+        return repr(int(v))
+    if isinstance(v, (float, np.floating)):
+        return repr(float(v))
+    try:                                     # 0-d jax/numpy array bindings
+        return _canon_binding(v.item())
+    except (AttributeError, ValueError):
+        return repr(v)
+
+
+def plan_fingerprint(nodes, bindings: dict | None = None) -> int:
+    """Stable CONTENT fingerprint of a plan (walk order) plus its parameter
+    bindings — keeps one store directory from serving another query's
+    snapshots.
+
+    Hashes the planner's canonical node serialization
+    (:func:`repro.core.planner.plan_signature`): node types, column names,
+    join/group keys, aggregate ops, literals and parameter specs, and the
+    exact child wiring.  The predecessor hashed only the node-type-name
+    sequence, so every same-shaped query — and every binding of one plan
+    template — collided, letting a resume adopt a different query's
+    snapshots: a silent wrong answer.  Distinct ``bindings`` of one template
+    are distinct fingerprints for the same reason."""
+    text = _walk_signature(nodes)
+    if bindings:
+        text += "||" + ";".join(f"{k}={_canon_binding(v)}"
+                                for k, v in sorted(bindings.items()))
+    return int.from_bytes(
+        hashlib.blake2b(text.encode(), digest_size=8).digest(), "big")
 
 
 def _is_traced(x) -> bool:
@@ -83,11 +114,13 @@ class LineageStore:
         self.saved = 0
 
     def begin_executor(self, nodes, inference: bool,
-                       wire_format: str | None) -> None:
+                       wire_format: str | None,
+                       bindings: dict | None = None) -> None:
         """Called by ``planner._Executor.run`` (duck-typed: the core layer
-        never imports this module) with the plan's walk order and the run's
-        configuration legs."""
-        self.begin_plan({"plan": plan_fingerprint(nodes),
+        never imports this module) with the plan's walk order, the run's
+        configuration legs, and the template parameter bindings (if any) —
+        two bindings of one template must never exchange snapshots."""
+        self.begin_plan({"plan": plan_fingerprint(nodes, bindings),
                          "inference": bool(inference),
                          "wire_format": wire_format})
 

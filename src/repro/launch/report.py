@@ -128,15 +128,32 @@ def run_report_table(recs):
                   f"| {a.get('error', '')[:40]} |")
 
 
+def serve_table():
+    """One-line markdown digest of ``BENCH_serve.json`` (repo root)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "BENCH_serve.json")
+    r = json.load(open(path))
+    print("| sf | requests | templates | recompiles | cache hits |"
+          " shared hits | cold | warm q/s | batch q/s | pass |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    print(f"| {r['sf']} | {r['requests']} | {r['templates']} "
+          f"| {r['recompiles']} | {r['cache_hits']} | {r['shared_hits']} "
+          f"| {r['cold_s']:.2f}s | {r['serve_qps']} | {r['batch_qps']} "
+          f"| {'yes' if r['pass'] else 'NO'} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
     ap.add_argument("--tag", default="")
     ap.add_argument("--section", default="roofline",
-                    choices=["roofline", "dryrun", "runs"])
+                    choices=["roofline", "dryrun", "runs", "serve"])
     args = ap.parse_args()
     if args.section == "runs":
         run_report_table(load_runs())
+        return
+    if args.section == "serve":
+        serve_table()
         return
     recs = load(args.mesh, args.tag)
     if args.section == "roofline":

@@ -1,4 +1,29 @@
-"""Serving substrate: cache layouts live in models/; step factories in
-train.trainstep (make_prefill_step / make_decode_step); sequence-sharded
-flash-decode specs in distributed.shardings.cache_specs."""
-from repro.train.trainstep import make_decode_step, make_prefill_step  # noqa
+"""Multi-tenant query serving (ROADMAP item 1): parameterized plan
+templates, a content-signature compiled-plan cache, and batch execution
+with cross-query sharing.
+
+Entry points:
+
+  * :class:`PlanTemplate` / :class:`BoundQuery` / ``TEMPLATES`` /
+    ``template_for`` — plans whose literals are ``Param`` placeholders;
+    one DAG + one analysis + one jit trace per template, domain-validated
+    binding per request (``templates.py``).
+  * :class:`PlanCache` — FIFO-bounded compiled-artifact cache keyed on plan
+    content signatures, evicted through the planner's stats-invalidation
+    registry (``cache.py``).
+  * :class:`QueryServer` / :class:`BatchExecutor` — the compiled serving
+    path (jit once per template, bindings as traced scalars) and the eager
+    batch path (cross-query subplan memo), both overflow-recovering
+    (``server.py``).
+
+    PYTHONPATH=src python benchmarks/bench_serve.py --check
+"""
+from .cache import PlanCache
+from .server import BatchExecutor, QueryServer
+from .templates import (BoundQuery, PlanTemplate, TEMPLATES,
+                        resolve_bindings, template_for)
+
+__all__ = [
+    "PlanTemplate", "BoundQuery", "TEMPLATES", "template_for",
+    "resolve_bindings", "PlanCache", "QueryServer", "BatchExecutor",
+]

@@ -1,0 +1,245 @@
+"""Multi-tenant serving: jit-once-per-template execution + batch sharing.
+
+Two execution paths, one correctness story:
+
+  * :class:`QueryServer` — the compiled path.  Each template is traced ONCE
+    per (database, configuration): parameter bindings enter the jitted
+    program as dtype-pinned traced scalars, so serving a new binding is a
+    cache hit and a device call, never a re-trace.  ``recompiles`` counts
+    actual traces (incremented INSIDE the traced body, so an accidental
+    re-trace — dtype drift, structure drift — is counted and the bench gate
+    ``benchmarks/bench_serve.py --check`` catches it).  Executables live in
+    a :class:`repro.serve.cache.PlanCache`, so ``invalidate_stats`` /
+    ``stats_override`` / table mutation evict them with the statistics they
+    were derived from.  A served request whose domain-derived claims prove
+    too tight for its binding surfaces as ``ctx.overflow``; the server
+    re-runs it on a conservative entry (inference off, escalated capacity,
+    its own cache key) — degraded latency, never a wrong answer.
+  * :class:`BatchExecutor` — the eager batch path.  Admits N bound queries
+    and extends the planner executor's per-plan DAG memo into a CROSS-QUERY
+    memo keyed by (subtree content hash, relevant bindings): scans and
+    common subplans — every query touching ``lineitem``, Q3/Q5 sharing a
+    filtered-orders fragment — execute once per batch.  Execution is eager,
+    so results are byte-identical to sequential one-query-at-a-time eager
+    execution (pinned by ``tests/test_serve.py`` on both planner and both
+    wire legs); an overflowing request forfeits its memo contributions and
+    re-runs conservatively in isolation, so a lying bound can never poison a
+    neighbour.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as B
+from repro.core import planner
+from repro.core import relational as rel
+from repro.core.table import Table, to_numpy
+from repro.core.wire import CorruptPayload
+from .cache import PlanCache
+from .templates import BoundQuery, PlanTemplate, TEMPLATES
+
+__all__ = ["QueryServer", "BatchExecutor"]
+
+_PDTYPE = {"int64": jnp.int64, "float64": jnp.float64}
+
+
+def _as_table(out):
+    if isinstance(out, dict):        # ScalarResult: one-row table
+        out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},
+                    jnp.asarray(1, jnp.int32))
+    return rel.ensure_compact(out)
+
+
+class QueryServer:
+    """Serve parameterized queries from jit-compiled template executables."""
+
+    def __init__(self, db, capacity_factor: float = 2.0,
+                 join_method: str = "sorted", use_kernel: bool | None = None,
+                 wire_format: str | None = None,
+                 cache: PlanCache | None = None):
+        self.db = db
+        self.capacity_factor = capacity_factor
+        self.join_method = join_method
+        self.use_kernel = use_kernel
+        self.wire_format = wire_format
+        self.cache = cache if cache is not None else PlanCache()
+        self.recompiles = 0          # jit traces (counted inside the trace)
+        self.cache_hits = 0
+        self.overflow_reruns = 0
+        self._tables = B._np_db_to_tables(db)
+
+    def _executable(self, template: PlanTemplate, infer: bool, factor: float):
+        key = ("exe", template.signature(), bool(infer), self.wire_format,
+               float(factor), self.join_method, self.use_kernel)
+        fn = self.cache.get(self.db, key)
+        if fn is None:
+            fn = self._compile(template, infer, factor)
+            self.cache.put(self.db, key, fn)
+        else:
+            self.cache_hits += 1
+        return fn
+
+    def _compile(self, template: PlanTemplate, infer: bool, factor: float):
+        query = template.query
+        # host-side, once per (template, db): domain-sound hints/wire bounds
+        info = query.info(self.db) if infer else None
+
+        def run(tables, pvals):
+            # trace-time side effect: every (re)trace of this executable is
+            # a counted recompile — the bench gate's ground truth
+            self.recompiles += 1
+            ctx = B.LocalContext(self.db, tables, capacity_factor=factor,
+                                 join_method=self.join_method,
+                                 use_kernel=self.use_kernel,
+                                 wire_format=self.wire_format)
+            out = planner._Executor(ctx, info, params=pvals).run(query.plan)
+            return _as_table(out), ctx.overflow, ctx.corrupt
+
+        return jax.jit(run)
+
+    def submit(self, template: PlanTemplate | int,
+               bindings: dict[str, Any] | None = None,
+               infer: bool | None = None) -> dict:
+        """Execute one parameterized request; returns the numpy result."""
+        if isinstance(template, int):
+            template = TEMPLATES[template]
+        if infer is None:
+            infer = planner.planner_default()
+        bound = template.bind(**(bindings or {}))
+        # dtype-pinned traced scalars; every declared parameter is always
+        # present, so the pytree structure (and hence the trace) is stable
+        pvals = {name: jnp.asarray(v, _PDTYPE[template.params[name].dtype])
+                 for name, v in bound.values.items()}
+        fn = self._executable(template, infer, self.capacity_factor)
+        out, overflow, corrupt = fn(self._tables, pvals)
+        if bool(overflow):
+            # a domain-derived claim was too tight for this binding (or the
+            # statistics lied): re-run conservatively — no hints, escalated
+            # capacity, full-width wire — under its own cache key so healthy
+            # traffic keeps the fast entry
+            self.overflow_reruns += 1
+            fn = self._executable(template, False,
+                                  self.capacity_factor * 4.0)
+            out, overflow, corrupt = fn(self._tables, pvals)
+        if bool(corrupt):
+            raise CorruptPayload("serve: payload integrity check failed")
+        if bool(overflow):
+            raise RuntimeError(
+                f"{template.name}: overflow persists on the conservative "
+                f"rerun (capacity_factor={self.capacity_factor * 4.0})")
+        return to_numpy(out)
+
+    def serve(self, requests, infer: bool | None = None) -> list[dict]:
+        """Submit a stream of ``(template_or_qid, bindings)`` requests."""
+        return [self.submit(t, b, infer=infer) for t, b in requests]
+
+
+class _SharedMemoExecutor(planner._Executor):
+    """Planner executor whose node memo extends across queries.
+
+    Key = (subtree content hash, the bindings of the parameters that subtree
+    can observe, inference leg).  Content-addressing makes distinct plan
+    objects with identical logical subtrees share; restricting the key to
+    the REACHABLE parameters lets two bindings share every subtree that
+    doesn't depend on where they differ (all scans, for one).  Sound because
+    per-subtree planner decisions (hints, wire bounds) depend only on the
+    subtree's content and the database statistics — identical key, identical
+    table."""
+
+    def __init__(self, ctx, info, params, subsigs, shared, added, owner):
+        super().__init__(ctx, info, params=params)
+        self._subsigs = subsigs
+        self._shared = shared
+        self._added = added
+        self._owner = owner
+
+    def _exec(self, node):
+        got = self.memo.get(id(node))
+        if got is not None:
+            return got
+        sig, pnames = self._subsigs[id(node)]
+        key = (sig, tuple(sorted((p, self.params.get(p)) for p in pnames)),
+               self.info is not None)
+        out = self._shared.get(key)
+        if out is not None:
+            self._owner.shared_hits += 1
+            self.memo[id(node)] = out
+            return out
+        out = super()._exec(node)    # recursion re-enters this override
+        self._shared[key] = out
+        self._added.append(key)
+        return out
+
+
+class BatchExecutor:
+    """Execute a batch of bound queries eagerly with cross-query sharing."""
+
+    def __init__(self, db, capacity_factor: float = 2.0,
+                 join_method: str = "sorted", use_kernel: bool | None = None,
+                 wire_format: str | None = None):
+        self.db = db
+        self.capacity_factor = capacity_factor
+        self.join_method = join_method
+        self.use_kernel = use_kernel
+        self.wire_format = wire_format
+        self.shared_hits = 0         # cross-query memo hits
+        self.overflow_reruns = 0
+        self._tables = B._np_db_to_tables(db)
+
+    def _ctx(self, factor: float):
+        return B.LocalContext(self.db, self._tables, capacity_factor=factor,
+                              join_method=self.join_method,
+                              use_kernel=self.use_kernel,
+                              wire_format=self.wire_format)
+
+    def run_batch(self, requests, infer: bool | None = None) -> list[dict]:
+        """``requests``: (template, bindings) pairs (or BoundQuery directly).
+
+        Returns per-request numpy results, byte-identical to running each
+        request alone (eager) in submission order.
+        """
+        if infer is None:
+            infer = planner.planner_default()
+        shared: dict = {}
+        ctx = self._ctx(self.capacity_factor)
+        results: list[dict] = []
+        for req in requests:
+            bound = req if isinstance(req, BoundQuery) else \
+                req[0].bind(**(req[1] or {}))
+            template = bound.template
+            info = template.query.info(self.db) if infer else None
+            added: list = []
+            ex = _SharedMemoExecutor(ctx, info, bound.values,
+                                     template.subplan_signatures(), shared,
+                                     added, self)
+            out = _as_table(ex.run(template.query.plan))
+            if bool(ctx.corrupt):
+                raise CorruptPayload(
+                    "batch: payload integrity check failed")
+            if bool(ctx.overflow):
+                # this request's claims lied: its memo contributions are not
+                # trustworthy state — forfeit them, re-run the request alone
+                # conservatively, and start the NEXT request on a fresh
+                # context (the overflow flag is sticky by design)
+                for k in added:
+                    shared.pop(k, None)
+                results.append(self._conservative(bound))
+                ctx = self._ctx(self.capacity_factor)
+                continue
+            results.append(to_numpy(out))
+        return results
+
+    def _conservative(self, bound: BoundQuery) -> dict:
+        self.overflow_reruns += 1
+        ctx = self._ctx(self.capacity_factor * 4.0)
+        out = _as_table(bound.with_inference(False)(ctx))
+        if bool(ctx.corrupt):
+            raise CorruptPayload("batch: payload integrity check failed")
+        if bool(ctx.overflow):
+            raise RuntimeError(
+                f"{bound.template.name}: overflow persists on the "
+                f"conservative rerun")
+        return to_numpy(out)

@@ -8,13 +8,16 @@ Checks, each fatal:
      README.md (so a new flag cannot ship undocumented);
   2. every ``REPRO_*`` flag the README documents still exists in ``src/``
      (so the matrix cannot rot);
-  3. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
+  3. every public serving entry point (``repro.serve.__all__``) is named in
+     README.md (the serving table cannot drift from the module surface);
+  4. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
      (commit ebdc242 shipped bytecode once; never again).
 
     python tools/check_docs.py
 """
 from __future__ import annotations
 
+import ast
 import os
 import re
 import subprocess
@@ -40,6 +43,20 @@ def flags_in_readme() -> set[str]:
         return set(FLAG_RE.findall(fh.read()))
 
 
+def serve_all() -> list[str]:
+    """The serving layer's ``__all__``, read without importing (no jax)."""
+    path = os.path.join(ROOT, "src", "repro", "serve", "__init__.py")
+    with open(path) as fh:
+        tree = ast.parse(fh.read())
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            return [ast.literal_eval(elt) for elt in node.value.elts]
+    raise SystemExit("check_docs: src/repro/serve/__init__.py has no "
+                     "literal __all__")
+
+
 def tracked_bytecode() -> list[str]:
     out = subprocess.run(["git", "ls-files", "*.pyc", "*__pycache__*"],
                          cwd=ROOT, capture_output=True, text=True, check=True)
@@ -57,6 +74,12 @@ def main() -> int:
     if stale:
         errors.append(f"flags documented in README but no longer read in "
                       f"src/: {stale}")
+    with open(os.path.join(ROOT, "README.md")) as fh:
+        readme_text = fh.read()
+    missing = sorted(n for n in serve_all() if n not in readme_text)
+    if missing:
+        errors.append(f"serving entry points (repro.serve.__all__) missing "
+                      f"from README: {missing}")
     pyc = tracked_bytecode()
     if pyc:
         errors.append(f"tracked bytecode files: {pyc[:5]}"
