@@ -20,7 +20,7 @@ import math
 import numpy as np
 
 __all__ = [
-    "ClusterSpec", "CLUSTERS", "Hockney",
+    "ClusterSpec", "CLUSTERS", "Hockney", "hockney_from_env",
     "broadcast_throughput", "shuffle_throughput", "broadcast_beats_shuffle",
     "shuffle_time_skewed", "fit_hockney", "exchange_time",
     "exchange_time_from_stats", "wire_savings", "project_workload",
@@ -127,6 +127,26 @@ class Hockney:
 
     def time(self, m: float) -> float:
         return self.latency + self.inv_bw * m
+
+    def latency_bound(self, m: float) -> bool:
+        """True when a message of ``m`` bytes sits below the half-bandwidth
+        point m* = L/c: the transfer term c*m is no larger than the constant
+        L, so shrinking the payload cannot materially shorten the exchange."""
+        return self.inv_bw * m <= self.latency
+
+
+def hockney_from_env(env: str | None = None) -> Hockney | None:
+    """Hockney link model from ``REPRO_HOCKNEY="<latency_s>,<inv_bw_s/B>"``.
+
+    Unset/empty means no model (returns None).  A trailing third field is
+    permitted and ignored here (:mod:`repro.core.wire` reads it as the
+    nominal per-message row count for its packing-skip policy)."""
+    import os
+    spec = os.environ.get("REPRO_HOCKNEY", "") if env is None else env
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    if len(parts) < 2:
+        return None
+    return Hockney(latency=float(parts[0]), inv_bw=float(parts[1]))
 
 
 def fit_hockney(msg_bytes: np.ndarray, times_s: np.ndarray) -> Hockney:

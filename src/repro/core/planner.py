@@ -787,12 +787,15 @@ def static_wire_stats(root: P.Node, db, narrow: bool = True,
     def emit(kind: str, n: P.Node, force_wide: bool = False):
         dt = dtw.payload(n)
         use_narrow = narrow and not force_wide
-        rw, rl = wi.row_bytes(sorted(dt), dt,
-                              bounds=info.wire_for(n) if use_narrow else None,
-                              narrow=use_narrow)
-        entries.append({"kind": kind, "row_wire_bytes": rw,
-                        "row_logical_bytes": rl,
-                        "wire": "narrow" if use_narrow else "wide"})
+        fmt = wi.plan_wire_format(
+            sorted(dt), dt, bounds=info.wire_for(n) if use_narrow else None,
+            narrow=use_narrow)
+        # report the format's OWN verdict: plan_wire_format may demote a
+        # latency-bound message to wide (wire.hockney_skip), and runtime
+        # stats tag what actually shipped
+        entries.append({"kind": kind, "row_wire_bytes": fmt.row_wire_bytes,
+                        "row_logical_bytes": fmt.row_logical_bytes,
+                        "wire": "narrow" if fmt.narrow else "wide"})
 
     def visit(n: P.Node):
         if id(n) in seen:

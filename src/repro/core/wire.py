@@ -73,7 +73,8 @@ import numpy as np
 
 __all__ = [
     "ColWire", "WireFormat", "CorruptPayload", "wire_default",
-    "plan_wire_format", "pack_table", "unpack_table", "row_bytes",
+    "hockney_skip", "plan_wire_format", "pack_table", "unpack_table",
+    "row_bytes",
     "payload_checksum", "fold16", "header_mode",
     "encode_header_word0", "encode_checksum_word", "decode_header_word0",
     "verify_block_checksum",
@@ -98,6 +99,32 @@ def wire_default() -> str:
     """
     return "wide" if os.environ.get("REPRO_WIRE", "narrow").lower() in \
         ("wide", "0", "off") else "narrow"
+
+
+# nominal rows per exchange message for the latency-bound test; override with
+# the third REPRO_HOCKNEY field
+_HOCKNEY_MSG_ROWS = 4096
+
+
+def hockney_skip(wide_row_bytes: int) -> bool:
+    """True when ``REPRO_HOCKNEY="<latency_s>,<inv_bw_s/B>[,<msg_rows>]"``
+    prices the exchange message as latency-bound (§3.6): even the un-narrowed
+    message of ``wide_row_bytes * msg_rows`` bytes sits below the link's
+    half-bandwidth point, so the narrow format's wire saving is dwarfed by
+    the constant latency term while its pack/unpack lanes still cost compute
+    — narrow packing is skipped.
+
+    Pure host arithmetic on the per-row width and the env-configured model:
+    static analysis (``planner.static_wire_stats``) and every backend reach
+    the same verdict, so the static report stays equal to runtime stats.
+    """
+    from . import perfmodel
+    model = perfmodel.hockney_from_env()
+    if model is None:
+        return False
+    parts = [p.strip() for p in os.environ.get("REPRO_HOCKNEY", "").split(",")]
+    rows = int(parts[2]) if len(parts) > 2 and parts[2] else _HOCKNEY_MSG_ROWS
+    return model.latency_bound(wide_row_bytes * rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,6 +183,12 @@ def plan_wire_format(names: Sequence[str],
     are placed widest-first first-fit, so the layout is deterministic.
     """
     narrow = bool(narrow and bounds is not None)
+    if narrow:
+        # Hockney-driven packing skip: a latency-bound message ships wide
+        wide_words = sum(2 if _norm_dtype(dtypes[n]).itemsize > 4 else 1
+                         for n in names)
+        if hockney_skip(max(1, wide_words) * 4):
+            narrow = False
     chosen: list[ColWire] = []
     for nm in sorted(names):
         dt = _norm_dtype(dtypes[nm])

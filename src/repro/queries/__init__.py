@@ -66,6 +66,8 @@ broadcasts) compact internally.  Column expressions run on garbage rows too,
 which is safe because garbage values are always drawn from previously valid
 rows and therefore stay in-domain for every LUT.
 """
+import os
+
 from repro.core.planner import compile_query
 
 from . import q01_08, q09_15, q16_22
@@ -75,6 +77,15 @@ PLANS = {}
 for _mod in (q01_08, q09_15, q16_22):
     for _name in _mod.__all__:
         PLANS[int(_name[1:])] = getattr(_mod, _name)
+
+# REPRO_FRONTEND=sql swaps in plans compiled from the committed SQL texts
+# (src/repro/queries/sql/q*.sql) by the repro.sql frontend + IR optimizer.
+# Same Table 4 exchange counts, same wire budgets, byte-identical results —
+# asserted by tests/test_sql_frontend.py and the sql CI leg.
+if os.environ.get("REPRO_FRONTEND", "").lower() == "sql":
+    from repro.sql.frontend import sql_plans as _sql_plans
+    PLANS = _sql_plans()
+    assert sorted(PLANS) == list(range(1, 23)), sorted(PLANS)
 
 # compiled queries: `query_fn(ctx)` callables, plan built once and shared
 QUERIES = {qid: compile_query(fn, name=f"q{qid}")

@@ -11,26 +11,26 @@ declared domains host-side and returns a :class:`BoundQuery`, a plain
 ``query_fn(ctx)`` the whole existing machinery (backends, fault runner,
 lineage) accepts unchanged.
 
-``TEMPLATES`` covers all 22 TPC-H queries: Q1/Q3/Q5/Q6 carry genuine
-parameters (the TPC-H substitution parameters: dates, discount window,
-quantity threshold) with domains spanning the spec's substitution ranges and
-defaults equal to the validation literals of :mod:`repro.queries`; the rest
-wrap the literal builders as zero-parameter templates, so a mixed serving
-stream can interleave every query shape.  Each template ships ``samples`` —
-admissible bindings (``samples[0]`` is the canonical/default one) — used by
-the differential tests and ``benchmarks/bench_serve.py`` to synthesize
-parameterized traffic.
+``TEMPLATES`` covers all 22 TPC-H queries and is built entirely from the
+committed SQL texts (``src/repro/queries/sql/q*.sql``) via
+:meth:`PlanTemplate.from_sql`: Q1/Q3/Q5/Q6 carry genuine parameters (the
+TPC-H substitution parameters: dates, discount window, quantity threshold)
+as ``declare .. in (lo, hi)`` headers whose domains span the spec's
+substitution ranges and whose defaults equal the validation literals of
+:mod:`repro.queries`; the rest compile to zero-parameter templates, so a
+mixed serving stream can interleave every query shape.  Each template ships
+``samples`` — admissible bindings (``samples[0]`` is the canonical/default
+one) — used by the differential tests and ``benchmarks/bench_serve.py`` to
+synthesize parameterized traffic.
 """
 from __future__ import annotations
 
 from typing import Any, Callable
 
 from repro.core import plan as P
-from repro.core.plan import col, param, result, scan, scode
 from repro.core.planner import (CompiledQuery, compile_query, params_of,
                                 subplan_signatures)
 from repro.core.table import days
-from repro.queries import PLANS
 
 __all__ = ["PlanTemplate", "BoundQuery", "resolve_bindings", "TEMPLATES",
            "template_for"]
@@ -140,129 +140,50 @@ class PlanTemplate:
     def bind(self, **bindings) -> BoundQuery:
         return BoundQuery(self, resolve_bindings(self.params, bindings))
 
+    @classmethod
+    def from_sql(cls, text: str, name: str | None = None,
+                 samples: list[dict] | None = None) -> "PlanTemplate":
+        """Compile SQL ``text`` into a template.  ``declare`` headers become
+        the template's parameters (name, dtype, domain, default)."""
+        from repro.sql.frontend import plan_sql
+        return cls(lambda: plan_sql(text), name=name, samples=samples)
+
 
 # ---------------------------------------------------------------------------
-# the 22 TPC-H templates
+# the 22 TPC-H templates, compiled from the committed SQL texts
 # ---------------------------------------------------------------------------
-
-_disc = col("l_extendedprice") * (1 - col("l_discount"))
-_charge = _disc * (1 + col("l_tax"))
-
-
-def _q1_template() -> P.Node:
-    """Q1 with the DELTA-substituted ship-date cutoff as a parameter."""
-    cutoff = param("q1_cutoff", lo=days("1998-08-01"), hi=days("1998-10-01"),
-                   default=days("1998-09-02"))
-    l = scan("lineitem").filter(col("l_shipdate") <= cutoff)
-    g = l.group_by(["l_returnflag", "l_linestatus"], [
-        ("sum_qty", "sum", "l_quantity"),
-        ("sum_base_price", "sum", "l_extendedprice"),
-        ("sum_disc_price", "sum", _disc),
-        ("sum_charge", "sum", _charge),
-        ("avg_qty", "avg", "l_quantity"),
-        ("avg_price", "avg", "l_extendedprice"),
-        ("avg_disc", "avg", "l_discount"),
-        ("count_order", "count", None),
-    ], exchange="gather", final=True)
-    return g.finalize(sort_keys=[("l_returnflag", True),
-                                 ("l_linestatus", True)], replicated=True)
-
-
-def _q3_template() -> P.Node:
-    """Q3 with the order/ship DATE pivot as a parameter."""
-    d = param("q3_date", lo=days("1995-03-01"), hi=days("1995-03-31"),
-              default=days("1995-03-15"))
-    c = scan("customer").filter(col("c_mktsegment") ==
-                                scode("c_mktsegment", "BUILDING"))
-    cb = c.select("c_custkey").broadcast()
-    o = scan("orders").filter(col("o_orderdate") < d)
-    o = o.semi(cb, "o_custkey", "c_custkey")
-    l = scan("lineitem").filter(col("l_shipdate") > d)
-    j = l.join(o, "l_orderkey", "o_orderkey",
-               ["o_orderdate", "o_shippriority"])
-    g = j.group_by(["l_orderkey"], [
-        ("revenue", "sum", _disc),
-        ("o_orderdate", "max", "o_orderdate"),
-        ("o_shippriority", "max", "o_shippriority"),
-    ], exchange="local")
-    return g.finalize(sort_keys=[("revenue", False), ("o_orderdate", True)],
-                      limit=10)
-
-
-def _q5_template() -> P.Node:
-    """Q5 with the order-date year window as parameters."""
-    lo = param("q5_date_lo", lo=days("1993-01-01"), hi=days("1997-01-01"),
-               default=days("1994-01-01"))
-    hi = param("q5_date_hi", lo=days("1994-01-01"), hi=days("1998-01-01"),
-               default=days("1995-01-01"))
-    n = scan("nation").join(scan("region"), "n_regionkey", "r_regionkey",
-                            ["r_name"])
-    n = n.filter(col("r_name") == scode("r_name", "ASIA"))
-    c = scan("customer").semi(n, "c_nationkey", "n_nationkey")
-    cb = c.select("c_custkey", "c_nationkey").broadcast()
-    o = scan("orders").filter((col("o_orderdate") >= lo) &
-                              (col("o_orderdate") < hi))
-    oj = o.join(cb, "o_custkey", "c_custkey", ["c_nationkey"])
-    lj = scan("lineitem").join(oj, "l_orderkey", "o_orderkey",
-                               ["c_nationkey"])
-    s = scan("supplier").semi(n, "s_nationkey", "n_nationkey")
-    sb = s.select("s_suppkey", "s_nationkey").broadcast()
-    lj = lj.join(sb, "l_suppkey", "s_suppkey", ["s_nationkey"])
-    lj = lj.filter(col("c_nationkey") == col("s_nationkey"))
-    g = lj.group_by(["s_nationkey"], [("revenue", "sum", _disc)],
-                    exchange="gather", final=True)
-    return g.finalize(sort_keys=[("revenue", False)], replicated=True)
-
 
 def _q6_template() -> P.Node:
-    """Q6 with every TPC-H substitution parameter lifted: date window,
-    discount band (bound directly — no float arithmetic on a parameter, so
-    byte-identity with literal plans is exact) and quantity threshold."""
-    dlo = param("q6_date_lo", lo=days("1993-01-01"), hi=days("1997-01-01"),
-                default=days("1994-01-01"))
-    dhi = param("q6_date_hi", lo=days("1994-01-01"), hi=days("1998-01-01"),
-                default=days("1995-01-01"))
-    disc_lo = param("q6_disc_lo", lo=0.01, hi=0.09, default=0.05)
-    disc_hi = param("q6_disc_hi", lo=0.01, hi=0.09, default=0.07)
-    qty = param("q6_qty", lo=20, hi=30, default=24)
-    l = scan("lineitem").filter(
-        (col("l_shipdate") >= dlo) & (col("l_shipdate") < dhi) &
-        (col("l_discount") >= disc_lo) & (col("l_discount") <= disc_hi) &
-        (col("l_quantity") < qty))
-    s = l.agg_scalar([("revenue", "sum",
-                       col("l_extendedprice") * col("l_discount"))])
-    return result(revenue=s["revenue"])
+    """The Q6 template's plan builder (SQL-compiled); kept addressable so
+    tests can construct a structural twin of ``TEMPLATES[6]``."""
+    from repro.sql.frontend import plan_sql, sql_text
+    return plan_sql(sql_text(6))
 
 
-# parameterized builders + the sample bindings the tests/bench stream with;
-# samples[0] = {} binds every default, reproducing the literal query exactly
-_PARAMETERIZED: dict[int, tuple[Callable[[], P.Node], list[dict]]] = {
-    1: (_q1_template, [{},
-                       {"q1_cutoff": days("1998-08-15")},
-                       {"q1_cutoff": days("1998-09-20")}]),
-    3: (_q3_template, [{},
-                       {"q3_date": days("1995-03-07")},
-                       {"q3_date": days("1995-03-25")}]),
-    5: (_q5_template, [{},
-                       {"q5_date_lo": days("1995-01-01"),
-                        "q5_date_hi": days("1996-01-01")}]),
-    6: (_q6_template, [{},
-                       {"q6_disc_lo": 0.03, "q6_disc_hi": 0.05,
-                        "q6_qty": 25},
-                       {"q6_date_lo": days("1995-01-01"),
-                        "q6_date_hi": days("1996-01-01")}]),
+# sample bindings the tests/bench stream with; samples[0] = {} binds every
+# default, reproducing the literal query exactly
+_SAMPLES: dict[int, list[dict]] = {
+    1: [{},
+        {"q1_cutoff": days("1998-08-15")},
+        {"q1_cutoff": days("1998-09-20")}],
+    3: [{},
+        {"q3_date": days("1995-03-07")},
+        {"q3_date": days("1995-03-25")}],
+    5: [{},
+        {"q5_date_lo": days("1995-01-01"),
+         "q5_date_hi": days("1996-01-01")}],
+    6: [{},
+        {"q6_disc_lo": 0.03, "q6_disc_hi": 0.05, "q6_qty": 25},
+        {"q6_date_lo": days("1995-01-01"),
+         "q6_date_hi": days("1996-01-01")}],
 }
 
 
 def _make_templates() -> dict[int, PlanTemplate]:
-    out = {}
-    for qid, build in sorted(PLANS.items()):
-        if qid in _PARAMETERIZED:
-            fn, samples = _PARAMETERIZED[qid]
-            out[qid] = PlanTemplate(fn, name=f"q{qid}", samples=samples)
-        else:
-            out[qid] = PlanTemplate(build, name=f"q{qid}", samples=[{}])
-    return out
+    from repro.sql.frontend import sql_text
+    return {qid: PlanTemplate.from_sql(sql_text(qid), name=f"q{qid}",
+                                       samples=_SAMPLES.get(qid))
+            for qid in range(1, 23)}
 
 
 TEMPLATES: dict[int, PlanTemplate] = _make_templates()

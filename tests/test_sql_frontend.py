@@ -1,0 +1,263 @@
+"""SQL frontend tests: parser contract, printer round trip, differential.
+
+Three layers:
+
+  * **Negative paths** — malformed or unsupported SQL raises ``SqlError``
+    with a clear message and (wherever a token is at fault) a 1-based
+    line/column, never a bare ``KeyError``/``AttributeError``.
+  * **Round trip** — ``parse_expr(format_expr(e)) == e`` on generated
+    expression trees (hypothesis) and ``parse(format_query(parse(text)))``
+    is a fixpoint on all 22 committed TPC-H texts: the canonical printer
+    emits exactly the SQL the parser accepts.
+  * **Differential** — every committed SQL query compiles through the
+    optimizer to a plan that validates clean, matches paper Table 4
+    exchange counts EXACTLY, stays within the hand-built plans' wire-byte
+    budgets, keeps static exchange counts equal to runtime, and returns
+    byte-identical results to the hand-built DAG on the reference backend
+    (the ``REPRO_FRONTEND=sql`` CI leg re-runs the whole tier on these
+    plans; the local-backend leg here is the slow marker).
+"""
+import numpy as np
+import pytest
+
+from repro.core import backend as B
+from repro.core import planner as PL
+from repro.data import tpch
+from repro.queries import PAPER_TABLE4, QUERIES
+from repro.sql import SqlError, sql_queries
+from repro.sql import ast as A
+from repro.sql.ast import format_expr, format_query
+from repro.sql.frontend import plan_sql, sql_text
+from repro.sql.parser import parse, parse_expr
+
+# hand-built plans' CI wire budgets (benchmarks/bench_exchange_bytes.py):
+# the SQL-compiled plans must not exceed them
+MAX_WIRE_BYTES = {1: 92, 2: 28, 3: 16, 4: 12, 5: 20, 6: 0, 7: 20, 8: 32,
+                  9: 44, 10: 32, 11: 16, 12: 20, 13: 28, 14: 20, 15: 24,
+                  16: 24, 17: 16, 18: 48, 19: 4, 20: 16, 21: 16, 22: 32}
+
+
+@pytest.fixture(scope="module")
+def db():
+    return tpch.generate(0.005, seed=11)
+
+
+@pytest.fixture(scope="module")
+def sqlq():
+    return sql_queries()
+
+
+# ---------------------------------------------------------------------------
+# negative paths
+# ---------------------------------------------------------------------------
+
+_BAD = [
+    ("select x from nosuchtable", "unknown table", True),
+    ("select nosuch from lineitem", "unknown column", True),
+    ("select l_orderkey from lineitem, orders", "comma joins", False),
+    ("select l_orderkey from lineitem where l_quantity = 'FOO'",
+     "non-dictionary", True),
+    ("select l_orderkey from lineitem where l_comment is null",
+     "IS [NOT] NULL", True),
+    ("select cast(l_quantity as int) from lineitem", "CAST", True),
+    ("select /*+ bogus(3) */ l_orderkey from lineitem", "unknown hint", True),
+    ("select l_orderkey from lineitem where l_quantity < :p",
+     "undeclared parameter", False),
+    ("select case when l_quantity > 1 then 1.0 end as x from lineitem",
+     "ELSE", False),
+    ("select case when l_quantity > 1 then 1.0 else 0.0 end from lineitem",
+     "needs AS", False),
+    ("with a as (select l_orderkey as k, l_tax from lineitem) "
+     "select l_tax from lineitem join a on l_orderkey = k",
+     "ambiguous column", True),
+    ("select l_orderkey from lineitem order by nosuch",
+     "not in the select list", True),
+    ("select l_orderkey from lineitem where", "unexpected", True),
+    ("select sum(l_quantity) from lineitem group by", "unexpected", True),
+]
+
+
+@pytest.mark.parametrize("text,needle,has_pos", _BAD,
+                         ids=[n for _, n, _ in _BAD])
+def test_negative_paths_raise_sql_error(text, needle, has_pos):
+    with pytest.raises(SqlError) as exc:
+        plan_sql(text)
+    assert needle in str(exc.value), str(exc.value)
+    if has_pos:
+        assert exc.value.line is not None and exc.value.col is not None
+        assert exc.value.line >= 1 and exc.value.col >= 1
+        assert f"line {exc.value.line}" in str(exc.value)
+
+
+def test_error_position_points_at_offender():
+    with pytest.raises(SqlError) as exc:
+        plan_sql("select l_orderkey,\n       oops\nfrom lineitem")
+    assert (exc.value.line, exc.value.col) == (2, 8)
+
+
+# ---------------------------------------------------------------------------
+# printer round trip
+# ---------------------------------------------------------------------------
+
+def _roundtrip(e: A.Expr):
+    text = format_expr(e)
+    back = parse_expr(text)
+    assert back == e, f"{e!r} -> {text!r} -> {back!r}"
+
+
+def test_roundtrip_fixed_shapes():
+    sub = A.Select(items=(A.SelectItem(A.Ident("k")),),
+                   frm=(A.FromItem(A.Table("t")),))
+    for e in [
+        A.Binary("-", A.Number(1), A.Binary("-", A.Number(2), A.Number(3))),
+        A.Binary("/", A.Binary("/", A.Ident("a"), A.Ident("b")),
+                 A.Ident("c")),
+        A.Unary("not", A.Binary("and", A.LikeE(A.Ident("s"), "%x%"),
+                                A.Between(A.Ident("a"), A.Number(1),
+                                          A.Number(2)))),
+        A.Func("count", (A.Star(),)),
+        A.Func("count", (A.Ident("a"),), distinct=True),
+        A.InQuery(A.Ident("a"), sub),
+        A.ExistsE(sub, negated=True),
+        A.Binary("+", A.Scalar(sub), A.Number(1)),
+        A.CaseE(((A.Binary(">", A.Ident("a"), A.Number(0)),
+                  A.Number(1)),), A.Number(0)),
+    ]:
+        _roundtrip(e)
+
+
+def test_roundtrip_interval_and_date_arith():
+    _roundtrip(A.Binary("+", A.DateL("1994-01-01"), A.IntervalL(90, "day")))
+    _roundtrip(A.Binary("<", A.Func("year", (A.Ident("d"),)),
+                        A.Number(1997)))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYP = False
+
+
+if HAVE_HYP:
+    _names = st.sampled_from(["a", "b", "c_name", "l_qty", "x1"])
+    _idents = st.builds(A.Ident, _names,
+                        st.one_of(st.none(), st.sampled_from(["t", "u"])))
+    _numbers = st.one_of(
+        st.integers(0, 10**6).map(A.Number),
+        st.sampled_from([0.5, 0.05, 2.25, 100.75]).map(A.Number))
+    _strings = st.text(alphabet="abcXYZ 09#%-", min_size=0,
+                       max_size=8).map(A.String)
+    _dates = st.sampled_from(["1994-01-01", "1998-12-01"]).map(A.DateL)
+    _atoms = st.one_of(_idents, _numbers, _strings, _dates,
+                       st.builds(A.ParamE, st.sampled_from(["p", "q2"])))
+
+    def _compound(children):
+        arith = st.sampled_from(["+", "-", "*", "/"])
+        cmp_ops = st.sampled_from(["=", "<>", "<", "<=", ">", ">="])
+        logic = st.sampled_from(["and", "or"])
+        return st.one_of(
+            st.builds(A.Binary, arith, children, children),
+            st.builds(A.Binary, cmp_ops, children, children),
+            st.builds(A.Binary, logic, children, children),
+            st.builds(A.Unary, st.just("-"), _idents),
+            st.builds(A.Unary, st.just("not"),
+                      st.builds(A.Binary, cmp_ops, children, children)),
+            st.builds(A.Between, children, _atoms, _atoms, st.booleans()),
+            st.builds(A.InList, children,
+                      st.lists(_atoms, min_size=1, max_size=3)
+                      .map(tuple), st.booleans()),
+            st.builds(A.LikeE, _idents,
+                      st.text(alphabet="abc%", min_size=1, max_size=6),
+                      st.booleans()),
+            st.builds(A.CaseE,
+                      st.lists(st.tuples(
+                          st.builds(A.Binary, cmp_ops, _atoms, _atoms),
+                          _atoms), min_size=1, max_size=2).map(tuple),
+                      st.one_of(st.none(), _atoms)),
+            st.builds(A.Func,
+                      st.sampled_from(["sum", "min", "max", "avg", "year"]),
+                      st.tuples(children)),
+        )
+
+    _exprs = st.recursive(_atoms, _compound, max_leaves=25)
+
+    @settings(max_examples=150, deadline=None)
+    @given(_exprs)
+    def test_roundtrip_property(e):
+        """parse(print(ast)) == ast on generated expression trees."""
+        _roundtrip(e)
+
+
+@pytest.mark.parametrize("qid", sorted(MAX_WIRE_BYTES))
+def test_query_print_parse_fixpoint(qid):
+    """format_query emits SQL the parser maps back to the same AST —
+    declares, CTEs, hints and all — for every committed TPC-H text."""
+    ast1 = parse(sql_text(qid))
+    ast2 = parse(format_query(ast1))
+    assert ast2 == ast1, qid
+
+
+# ---------------------------------------------------------------------------
+# all-22 differential vs the hand-built plans
+# ---------------------------------------------------------------------------
+
+def _check_budgets(qid, q, db):
+    notes = PL.validate(q.plan, db)
+    assert not notes, notes
+    counts = q.static_counts()
+    want_s, want_b = PAPER_TABLE4[qid]
+    if qid == 11:          # documented deviation: local group-by under our
+        want_s, want_b = 0, 1   # partitioning (see queries/__init__.py)
+    assert counts["shuffles"] == want_s, counts
+    if want_b is not None:
+        assert counts["broadcasts"] == want_b, counts
+    per_row = sum(e["row_wire_bytes"] for e in q.static_wire(db))
+    assert per_row <= MAX_WIRE_BYTES[qid], (per_row, MAX_WIRE_BYTES[qid])
+
+
+def _compare(r_sql, r_hand, qid):
+    keys = set(r_sql) & set(r_hand)
+    assert keys, "no common output columns"
+    for k in sorted(keys):
+        a, b = np.asarray(r_sql[k]), np.asarray(r_hand[k])
+        assert a.shape == b.shape, (qid, k, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f"q{qid} {k}")
+
+
+@pytest.mark.parametrize("qid", sorted(MAX_WIRE_BYTES))
+def test_sql_plan_matches_hand_reference(db, sqlq, qid):
+    q = sqlq[qid]
+    _check_budgets(qid, q, db)
+    r_sql, stats = B.run_reference(q, db)
+    assert q.static_counts() == stats.counts(), qid
+    r_hand, _ = B.run_reference(QUERIES[qid], db)
+    _compare(r_sql, r_hand, qid)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("qid", [1, 6, 9, 13, 16, 18, 20, 22])
+def test_sql_plan_matches_hand_local(db, sqlq, qid):
+    r_sql, stats = B.run_local(sqlq[qid], db)
+    assert sqlq[qid].static_counts() == stats.counts(), qid
+    r_hand, _ = B.run_local(QUERIES[qid], db)
+    _compare(r_sql, r_hand, qid)
+
+
+def test_ad_hoc_sql_compiles_and_runs(db):
+    """A non-TPC-H query (the examples/sql_quickstart.py shape) end to end."""
+    from repro.sql import compile_sql
+    q = compile_sql("""
+        select n_name, count(*) as suppliers, sum(s_acctbal) as total_bal
+        from supplier
+        join nation on s_nationkey = n_nationkey
+        group by n_name
+        order by total_bal desc
+        limit 5
+    """, name="adhoc")
+    assert PL.validate(q.plan, db) == []
+    r, _ = B.run_reference(q, db)
+    assert set(r) == {"n_name", "suppliers", "total_bal"}
+    assert len(r["n_name"]) == 5
+    bal = np.asarray(r["total_bal"], np.float64)
+    assert np.all(bal[:-1] >= bal[1:])

@@ -294,6 +294,50 @@ def test_distributed_narrow_equals_wide_and_static(db, mesh1, qid):
         sum(e.message_bytes for e in s_w.log)
 
 
+# ---------------------------------------------------------------------------
+# Hockney-driven packing skip (REPRO_HOCKNEY)
+# ---------------------------------------------------------------------------
+
+def test_hockney_skip_thresholds(monkeypatch):
+    from repro.core import perfmodel as PM
+    monkeypatch.delenv("REPRO_HOCKNEY", raising=False)
+    assert PM.hockney_from_env() is None
+    assert not W.hockney_skip(24)
+    # 10us latency, 1ns/B: a 4096-row x 24B message costs ~98us on the wire
+    # -> bandwidth-bound, packing pays
+    monkeypatch.setenv("REPRO_HOCKNEY", "1e-5,1e-9")
+    assert not W.hockney_skip(24)
+    # 1ms latency: the same message sits below the half-bandwidth point
+    monkeypatch.setenv("REPRO_HOCKNEY", "1e-3,1e-9")
+    assert W.hockney_skip(24)
+    # explicit msg_rows field: one-row messages are latency-bound even at 10us
+    monkeypatch.setenv("REPRO_HOCKNEY", "1e-5,1e-9,1")
+    assert W.hockney_skip(24)
+
+
+def test_hockney_latency_bound_message_ships_wide(monkeypatch):
+    dt = {"dict8": np.dtype(np.int32), "key32": np.dtype(np.int64)}
+    bounds = {"dict8": (0, 24), "key32": (1, 1 << 20)}
+    monkeypatch.setenv("REPRO_HOCKNEY", "1.0,1e-9")
+    fmt = W.plan_wire_format(dt, dt, bounds, narrow=True)
+    assert not fmt.narrow and fmt.row_wire_bytes == 12   # wide: 1 + 2 words
+    monkeypatch.delenv("REPRO_HOCKNEY")
+    fmt = W.plan_wire_format(dt, dt, bounds, narrow=True)
+    assert fmt.narrow and fmt.row_wire_bytes < 12
+
+
+def test_hockney_skip_static_equals_runtime(db, monkeypatch):
+    """The skip is priced from per-row widths + the env model alone, so the
+    IR-derived report and every backend reach the same wide verdict."""
+    monkeypatch.setenv("REPRO_HOCKNEY", "1.0,1e-9")
+    for qid in (3, 9):
+        _, stats = B.run_reference(QUERIES[qid].with_inference(True), db,
+                                   wire_format="narrow")
+        got = _entries(stats)
+        assert got == _static(qid, db, True), qid
+        assert got and all(e[1] == "wide" for e in got), got
+
+
 def test_unpacked_mode_keeps_metadata_round(db, mesh1):
     """Paper-faithful per-column exchange: one collective per column PLUS the
     size-metadata round (the §2.3 baseline the fused header removes)."""

@@ -10,7 +10,9 @@ Checks, each fatal:
      (so the matrix cannot rot);
   3. every public serving entry point (``repro.serve.__all__``) is named in
      README.md (the serving table cannot drift from the module surface);
-  4. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
+  4. every public SQL-frontend entry point (``repro.sql.__all__``) is named
+     in README.md (same rule for the SQL quickstart section);
+  5. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
      (commit ebdc242 shipped bytecode once; never again).
 
     python tools/check_docs.py
@@ -43,9 +45,9 @@ def flags_in_readme() -> set[str]:
         return set(FLAG_RE.findall(fh.read()))
 
 
-def serve_all() -> list[str]:
-    """The serving layer's ``__all__``, read without importing (no jax)."""
-    path = os.path.join(ROOT, "src", "repro", "serve", "__init__.py")
+def module_all(*rel: str) -> list[str]:
+    """A module's literal ``__all__``, read without importing (no jax)."""
+    path = os.path.join(ROOT, "src", *rel)
     with open(path) as fh:
         tree = ast.parse(fh.read())
     for node in tree.body:
@@ -53,8 +55,16 @@ def serve_all() -> list[str]:
                 isinstance(t, ast.Name) and t.id == "__all__"
                 for t in node.targets):
             return [ast.literal_eval(elt) for elt in node.value.elts]
-    raise SystemExit("check_docs: src/repro/serve/__init__.py has no "
-                     "literal __all__")
+    raise SystemExit(f"check_docs: {os.path.join(*rel)} has no literal "
+                     "__all__")
+
+
+def serve_all() -> list[str]:
+    return module_all("repro", "serve", "__init__.py")
+
+
+def sql_all() -> list[str]:
+    return module_all("repro", "sql", "__init__.py")
 
 
 def tracked_bytecode() -> list[str]:
@@ -80,6 +90,10 @@ def main() -> int:
     if missing:
         errors.append(f"serving entry points (repro.serve.__all__) missing "
                       f"from README: {missing}")
+    missing_sql = sorted(n for n in sql_all() if n not in readme_text)
+    if missing_sql:
+        errors.append(f"SQL entry points (repro.sql.__all__) missing "
+                      f"from README: {missing_sql}")
     pyc = tracked_bytecode()
     if pyc:
         errors.append(f"tracked bytecode files: {pyc[:5]}"
