@@ -14,6 +14,12 @@ This benchmark measures that payoff end-to-end, per query:
                     recovery cost; no lineage armed).
   * ``resume_s``  — warm resume from a populated lineage store: restore the
                     topmost snapshot (CRC-verified) + re-execute the suffix.
+  * ``reshard_s`` — warm resume at a SHRUNKEN topology (snapshots written
+                    for an 8-wide mesh, resumed at 5): the degraded-mesh
+                    path, which adopts width-mismatched snapshots through
+                    the store's re-shard rule instead of recomputing from
+                    scan.  Gated against full re-execution by
+                    ``MAX_RESHARD_RATIO``.
 
 Timings are min-over-``--reps`` after a warm-up pass, so JIT/trace cost and
 page-cache effects hit both legs equally.  The store is populated once by a
@@ -51,6 +57,14 @@ OUT_PATH = os.path.join(ROOT, "BENCH_recovery.json")
 # restore is CRC + npy I/O on a compacted table.
 MAX_RECOVERY_RATIO = 0.6
 
+# A degraded-mesh resume (snapshots written at width N, adopted at N') pays
+# the same restore + suffix as a same-width resume — eager snapshots are
+# stored in global row order, so no data movement is added — but gets its
+# own, slightly looser budget so the gate localizes a regression in the
+# re-shard rule itself.
+MAX_RESHARD_RATIO = 0.7
+RESHARD_FROM, RESHARD_TO = 8, 5
+
 # Queries the ratio gate applies to at the default --sf.  Every query is
 # still measured and reported.
 RECOVERY_QUERIES = (5, 9, 18)
@@ -82,6 +96,8 @@ def main():
     db = tpch.generate(args.sf, seed=args.seed)
     report = {"sf": args.sf, "seed": args.seed, "reps": args.reps,
               "max_recovery_ratio": MAX_RECOVERY_RATIO,
+              "max_reshard_ratio": MAX_RESHARD_RATIO,
+              "reshard_widths": [RESHARD_FROM, RESHARD_TO],
               "gated_queries": sorted(RECOVERY_QUERIES), "queries": {}}
     ok = True
     work = tempfile.mkdtemp(prefix="bench_recovery_")
@@ -111,18 +127,46 @@ def main():
                 assert reused >= 1, f"q{qid}: resume did not hit a snapshot"
             resume_s = _time(resume, args.reps)
 
+            # degraded-mesh leg: snapshots written for an 8-wide topology,
+            # adopted by a 5-wide resume through the width-only-mismatch
+            # re-shard rule (LineageStore.resharded counts the adoptions)
+            store_w = LineageStore(os.path.join(work, f"q{qid}_w"))
+            inj_w = ChaosInjector(FaultPlan(qid, (
+                FaultSpec("transient", cut="finalize", attempt=1),)))
+            try:
+                run_resumable(q, db, store_w, capacity_factor=3.0,
+                              chaos=inj_w, n_devices=RESHARD_FROM)
+            except TransientFault:
+                pass
+
+            def reshard_resume():
+                _, _, _, reused = run_resumable(q, db, store_w,
+                                                capacity_factor=3.0,
+                                                n_devices=RESHARD_TO)
+                assert reused >= 1, f"q{qid}: re-shard resume missed"
+                assert store_w.resharded >= 1, \
+                    f"q{qid}: resume did not exercise the re-shard path"
+            reshard_s = _time(reshard_resume, args.reps)
+
             ratio = resume_s / full_s
+            reshard_ratio = reshard_s / full_s
             gated = qid in RECOVERY_QUERIES
-            q_ok = (not gated) or ratio < MAX_RECOVERY_RATIO
+            q_ok = (not gated) or (ratio < MAX_RECOVERY_RATIO
+                                   and reshard_ratio < MAX_RESHARD_RATIO)
             ok &= q_ok
             report["queries"][f"q{qid}"] = {
                 "full_s": round(full_s, 4), "resume_s": round(resume_s, 4),
-                "ratio": round(ratio, 3), "snapshots": snapshots,
+                "ratio": round(ratio, 3),
+                "reshard_s": round(reshard_s, 4),
+                "reshard_ratio": round(reshard_ratio, 3),
+                "snapshots": snapshots,
                 "gated": gated,
             }
             flag = "" if q_ok else "  ** OVER RATIO **"
             print(f"q{qid:2d}: full {full_s * 1e3:7.1f}ms -> resume "
-                  f"{resume_s * 1e3:7.1f}ms  (ratio {ratio:.2f}, "
+                  f"{resume_s * 1e3:7.1f}ms  (ratio {ratio:.2f}) -> reshard "
+                  f"{RESHARD_FROM}->{RESHARD_TO} {reshard_s * 1e3:7.1f}ms "
+                  f"(ratio {reshard_ratio:.2f}, "
                   f"{snapshots} snapshots){flag}", flush=True)
     finally:
         shutil.rmtree(work, ignore_errors=True)

@@ -29,7 +29,13 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
-    """Per-machine topology (paper Table 3 + our TPU target)."""
+    """Per-machine topology (paper Table 3 + our TPU target).
+
+    ``n_devices`` is the LIVE participant count.  It defaults to None, which
+    means "fully populated": every closed form below then derives N = k*V
+    from the boot-time shape.  After a mid-query device loss the runner pins
+    the surviving width with :meth:`with_devices`, and all Hockney / Eq.1-3
+    pricing uses N' instead of the boot-time N."""
     name: str
     k: int            # accelerators per machine / chips per pod
     bg: float         # intra-machine per-device unidirectional bw, bytes/s
@@ -38,6 +44,17 @@ class ClusterSpec:
     peak_flops: float = 0.0
     hbm_bw: float = 0.0
     price_hr: float = 0.0
+    n_devices: int | None = None   # live width; None = boot-time k*V
+
+    def with_devices(self, n: int) -> "ClusterSpec":
+        """Pin the live device count (e.g. after a topology shrink)."""
+        if n < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n}")
+        return dataclasses.replace(self, n_devices=int(n))
+
+    def live_n(self, v: int) -> int:
+        """Participant count for a V-machine job: N' when pinned, else k*V."""
+        return self.n_devices if self.n_devices is not None else self.k * v
 
 
 GBs = 1e9
@@ -64,7 +81,7 @@ CLUSTERS = {
 
 def broadcast_throughput(spec: ClusterSpec, v: int) -> float:
     """Eq. 1.  Total bytes / time for an all-to-all-nodes table replication."""
-    n = spec.k * v
+    n = spec.live_n(v)
     if v == 1:
         return n / (n - 1) * spec.bg if n > 1 else float("inf")
     return n / (n - 1) * min(spec.bn / spec.k, spec.bg)
@@ -72,7 +89,7 @@ def broadcast_throughput(spec: ClusterSpec, v: int) -> float:
 
 def shuffle_throughput(spec: ClusterSpec, v: int) -> float:
     """Eq. 2 (per-GPU network share Bn/k folded in, as in the paper)."""
-    n = spec.k * v
+    n = spec.live_n(v)
     if v == 1:
         return n * n / (n - 1) * spec.bg if n > 1 else float("inf")
     return v * v / (v - 1) * spec.bn
@@ -81,7 +98,7 @@ def shuffle_throughput(spec: ClusterSpec, v: int) -> float:
 def broadcast_beats_shuffle(spec: ClusterSpec, v: int, size_r: float,
                             size_s: float) -> bool:
     """Eq. 3: broadcast table R vs shuffling R and S both."""
-    n = spec.k * v
+    n = spec.live_n(v)
     if n == spec.k:   # V=1: |S|/|R| > N-1
         return size_s / size_r > n - 1
     return size_s / size_r > (n - 1) / (n - spec.k) * v - 1
@@ -168,7 +185,7 @@ def exchange_time(kind: str, spec: ClusterSpec, v: int, total_bytes: float,
 
     Projection I ignores message sizes (peak Bn/Bg); Projection II passes the
     Hockney fits so B(m) reflects the actual per-message size (§6.3)."""
-    n = spec.k * v
+    n = spec.live_n(v)
     if kind == "broadcast":
         m = total_bytes / n                     # ring step payload
         if hockney_n is not None and v > 1:
@@ -204,9 +221,11 @@ def exchange_time_from_stats(stats, spec: ClusterSpec, v: int = 1,
     narrowed the payload — so the Hockney model (§3.6) prices the compressed
     message size, not the logical table size.  The narrow-vs-wide delta is
     ``wire_savings(stats)``: the model's predicted benefit of shipping at
-    inferred bit widths.
+    inferred bit widths.  Explicit ``n_devices`` wins; a pinned
+    ``spec.n_devices`` (degraded mesh) wins over the logged participant
+    count, which reflects the width the stats were CAPTURED at.
     """
-    n = n_devices or stats.participants
+    n = n_devices or spec.n_devices or stats.participants
     if stats.kind.startswith("broadcast") or stats.kind == "gather":
         total = stats.message_bytes * n          # per-shard payload x N
         return exchange_time("broadcast", spec, v, total, hockney_n, hockney_g)

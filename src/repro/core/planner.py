@@ -1158,7 +1158,9 @@ class _Executor:
             self._tags = {id(n): i for i, n in enumerate(nodes)}
             store.begin_executor(nodes, self.info is not None,
                                  getattr(self.ctx, "wire_format", None),
-                                 bindings=self.params)
+                                 bindings=self.params,
+                                 n_devices=getattr(self.ctx,
+                                                   "lineage_devices", 1))
         return self._exec(node)
 
     def _wire(self, node: P.Node):
@@ -1238,7 +1240,7 @@ class _Executor:
             out = store.load(tag)      # checked BEFORE recursing: a hit
             if out is None:            # skips the whole subtree
                 out = self._exec_inner(node)
-                store.save(tag, out, self.ctx)
+                store.save(tag, out, self.ctx, node=node)
         else:
             out = self._exec_inner(node)
         self.memo[id(node)] = out

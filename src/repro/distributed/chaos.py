@@ -29,11 +29,19 @@ Fault kinds and their mechanism:
                      the compiled program — the wire checksum must catch it.
                      At cut points with no checksummed payload in flight the
                      detection is simulated by ORing ``ctx.corrupt``.
+  ``device_lost``    raises :class:`DeviceLost` naming one or more mesh
+                     participants dead — either an explicit ``devices`` set
+                     or ``n_lost`` seeded-random ranks.  The fault runner
+                     answers with a topology shrink: a new mesh over the
+                     survivors, re-plan, re-execute.
 
 Enabled for any test or bench via the ``REPRO_CHAOS`` env leg: unset / ``0``
 / ``off`` disables; any other integer seeds :meth:`FaultPlan.default` (one
 transient + one corrupt + one overflow across the first three attempts) and
-arms the fault runner's default injector (``ChaosInjector.from_env``).
+arms the fault runner's default injector (``ChaosInjector.from_env``).  A
+``lose=`` suffix (``REPRO_CHAOS="<seed>,lose=<r0>[+<r1>...][@<cut>]"``)
+arms :meth:`FaultPlan.device_loss` instead: the named ranks die at the
+named cut (default ``exchange``) on attempt 1.
 
 Everything here is deterministic in (seed, plan, query): the same schedule
 fires at the same cut visits and flips the same bit on every run — chaos
@@ -51,14 +59,14 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "FailureKind", "TransientFault", "FaultSpec", "FaultPlan",
-    "FiredFault", "ChaosInjector", "chaos_env_seed",
-    "CUT_POINTS", "FAULT_KINDS",
+    "FailureKind", "TransientFault", "DeviceLost", "FaultSpec", "FaultPlan",
+    "FiredFault", "ChaosInjector", "chaos_env_seed", "chaos_env_lost",
+    "resolve_lost", "CUT_POINTS", "FAULT_KINDS",
 ]
 
 CUT_POINTS = ("scan", "exchange", "group_by", "finalize")
 FAULT_KINDS = ("transient", "deterministic", "straggler", "overflow",
-               "corrupt")
+               "corrupt", "device_lost")
 
 
 class FailureKind(enum.Enum):
@@ -72,11 +80,16 @@ class FailureKind(enum.Enum):
                    conservative wide format — never serve the bad buffer.
     DETERMINISTIC  a plan-author bug (TypeError, ValueError, assertion …):
                    raise immediately; retrying cannot help.
+    DEVICE_LOST    one or more mesh participants are gone for good: retrying
+                   on the same topology can only fail again — shrink the
+                   mesh to the survivors, re-plan at the new width, and
+                   re-execute (the topology-elastic rung).
     """
     TRANSIENT = "transient"
     OVERFLOW = "overflow"
     CORRUPT = "corrupt"
     DETERMINISTIC = "deterministic"
+    DEVICE_LOST = "device_lost"
 
 
 class TransientFault(RuntimeError):
@@ -84,21 +97,71 @@ class TransientFault(RuntimeError):
     Classified TRANSIENT by the fault runner — retried with backoff."""
 
 
+class DeviceLost(RuntimeError):
+    """One or more mesh participants are permanently dead.
+
+    ``lost`` is the tuple of dead device ranks when the injection site knew
+    the live mesh width (``ctx.N`` on the distributed context, the logical
+    ``lineage_devices`` width on resumable eager runs); otherwise it is
+    empty and ``n_lost`` tells the fault runner how many seeded-random
+    ranks to resolve against its own mesh (:func:`resolve_lost`).
+    Classified DEVICE_LOST — recovered by topology shrink, never by
+    same-topology retry."""
+
+    def __init__(self, message: str, lost: tuple[int, ...] = (),
+                 n_lost: int = 1, seed: int = 0):
+        super().__init__(message)
+        self.lost = tuple(lost)
+        self.n_lost = int(n_lost)
+        self.seed = int(seed)
+
+
+def resolve_lost(exc: "DeviceLost", world: int) -> tuple[int, ...]:
+    """Dead ranks of a :class:`DeviceLost` against a ``world``-wide mesh.
+
+    Explicit ranks are clipped to the mesh; an unresolved fault picks
+    ``n_lost`` distinct seeded-random ranks.  Never returns the whole mesh:
+    at least one survivor remains (a query with zero devices is not a
+    topology, it is an outage)."""
+    if exc.lost:
+        lost = tuple(sorted({d for d in exc.lost if 0 <= d < world}))
+    else:
+        ranks = list(range(world))
+        lost_l: list[int] = []
+        for i in range(min(exc.n_lost, world)):
+            j = _mix(exc.seed, "device_lost", i) % len(ranks)
+            lost_l.append(ranks.pop(j))
+        lost = tuple(sorted(lost_l))
+    if len(lost) >= world:
+        lost = lost[: world - 1]
+    return lost
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One scheduled fault: WHAT (``kind``), WHERE (``cut``, ``index``) and
-    WHEN (``attempt``, 1-based)."""
+    WHEN (``attempt``, 1-based).  ``devices`` / ``n_lost`` parameterize a
+    ``device_lost`` fault: an explicit dead-rank set, or how many
+    seeded-random ranks to kill when the set is empty."""
     kind: str                 # one of FAULT_KINDS
     cut: str = "any"          # CUT_POINTS entry, or "any" = first cut visited
     index: int = 0            # which visit of that cut within the attempt
     attempt: int = 1          # fires on this run attempt only
     delay_s: float = 0.05     # straggler sleep
+    devices: tuple[int, ...] = ()   # device_lost: explicit dead ranks
+    n_lost: int = 1           # device_lost: seeded-random kill count
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.cut != "any" and self.cut not in CUT_POINTS:
             raise ValueError(f"unknown cut point {self.cut!r}")
+        object.__setattr__(self, "devices", tuple(self.devices))
+        if any(int(d) < 0 for d in self.devices):
+            raise ValueError(f"negative device rank in {self.devices!r}")
+        if self.kind == "device_lost" and not self.devices \
+                and self.n_lost < 1:
+            raise ValueError("device_lost needs devices or n_lost >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +183,17 @@ class FaultPlan:
             FaultSpec("overflow", cut="any", index=0, attempt=3),
         ))
 
+    @classmethod
+    def device_loss(cls, seed: int, devices: tuple[int, ...] = (),
+                    n_lost: int = 1, cut: str = "exchange") -> "FaultPlan":
+        """The topology-shrink schedule: the named ranks (or ``n_lost``
+        seeded-random ones) die at the first visit of ``cut`` on attempt 1;
+        the clean re-execution on the shrunken mesh is attempt 2."""
+        return cls(seed, (
+            FaultSpec("device_lost", cut=cut, index=0, attempt=1,
+                      devices=tuple(devices), n_lost=n_lost),
+        ))
+
 
 @dataclasses.dataclass(frozen=True)
 class FiredFault:
@@ -139,11 +213,38 @@ def _mix(seed: int, *parts) -> int:
 
 def chaos_env_seed() -> int | None:
     """``REPRO_CHAOS`` env leg: unset / ``0`` / ``off`` -> None (disabled);
-    any other value is the integer seed of the default fault plan."""
+    any other value is the integer seed of the armed fault plan.  A
+    ``,lose=...`` suffix (see :func:`chaos_env_lost`) does not change the
+    seed parse."""
     v = os.environ.get("REPRO_CHAOS", "").strip().lower()
+    v = v.split(",", 1)[0].strip()
     if v in ("", "0", "off", "false", "none"):
         return None
     return int(v)
+
+
+def chaos_env_lost() -> tuple[tuple[int, ...], str] | None:
+    """Device-loss suffix of ``REPRO_CHAOS``: ``<seed>,lose=<r0>[+<r1>...]
+    [@<cut>]`` -> (dead ranks, cut point); None when absent.
+
+    ``REPRO_CHAOS="1,lose=3"`` kills rank 3 at the first exchange;
+    ``REPRO_CHAOS="1,lose=1+4+6@scan"`` kills ranks 1, 4 and 6 at the first
+    scan.  With the suffix present the armed plan is
+    :meth:`FaultPlan.device_loss` instead of :meth:`FaultPlan.default`."""
+    v = os.environ.get("REPRO_CHAOS", "").strip().lower()
+    if "," not in v:
+        return None
+    suffix = v.split(",", 1)[1].strip()
+    if not suffix.startswith("lose="):
+        raise ValueError(f"REPRO_CHAOS suffix {suffix!r}: expected lose=...")
+    spec = suffix[len("lose="):]
+    cut = "exchange"
+    if "@" in spec:
+        spec, cut = spec.split("@", 1)
+    ranks = tuple(int(r) for r in spec.split("+") if r)
+    if not ranks:
+        raise ValueError("REPRO_CHAOS lose= names no ranks")
+    return ranks, cut
 
 
 class ChaosInjector:
@@ -162,7 +263,13 @@ class ChaosInjector:
     @classmethod
     def from_env(cls) -> "ChaosInjector | None":
         seed = chaos_env_seed()
-        return None if seed is None else cls(FaultPlan.default(seed))
+        if seed is None:
+            return None
+        lost = chaos_env_lost()
+        if lost is not None:
+            ranks, cut = lost
+            return cls(FaultPlan.device_loss(seed, devices=ranks, cut=cut))
+        return cls(FaultPlan.default(seed))
 
     def begin_attempt(self, attempt: int) -> None:
         """Reset per-cut visit counters for a fresh (re-)execution."""
@@ -195,6 +302,17 @@ class ChaosInjector:
             self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
             time.sleep(spec.delay_s)
             return None
+        if spec.kind == "device_lost":
+            self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
+            world = getattr(ctx, "N", None) or \
+                getattr(ctx, "lineage_devices", None)
+            exc = DeviceLost(
+                f"chaos: device(s) lost at {cut}#{i} "
+                f"(attempt {self._attempt})", lost=spec.devices,
+                n_lost=spec.n_lost, seed=self.plan.seed)
+            if not exc.lost and world:
+                exc.lost = resolve_lost(exc, int(world))
+            raise exc
         if spec.kind == "overflow":
             self.events.append(FiredFault(self._attempt, cut, i, spec.kind))
             ctx.overflow = ctx.overflow | jnp.asarray(True)

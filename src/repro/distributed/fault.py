@@ -23,11 +23,24 @@ so the runner reacts to what actually went wrong instead of retrying blindly:
   DETERMINISTIC  a plan-author bug (TypeError, ValueError, assertion …):
                  raised immediately on attempt 1 — re-execution cannot fix
                  code.
+  DEVICE_LOST    one or more mesh participants are permanently dead
+                 (:class:`repro.distributed.chaos.DeviceLost`): retrying on
+                 the same topology can only fail again.  The runner shrinks
+                 the mesh to the survivors (:func:`surviving_mesh`), bumps
+                 its topology generation, re-derives the perf-model budgets
+                 at the new width (``ClusterSpec.with_devices`` — Hockney /
+                 Eq. 3 pricing uses N', not the boot-time N), re-plans and
+                 re-executes.  ``run_distributed`` re-partitions the
+                 database over the surviving N' devices, so per-device
+                 capacity grows by N/N' automatically; with a lineage store
+                 armed, snapshots written at width N are re-sharded onto N'
+                 instead of discarded.
 
 Each attempt is logged in a :class:`RunReport` (failure kind, chaos cut
-point, backoff, snapshot reuse) surfaced through ``launch/report.py``; the
-seeded chaos harness (:mod:`repro.distributed.chaos`, ``REPRO_CHAOS`` env)
-drives every branch of this policy deterministically in CI.
+point, backoff, snapshot reuse, live device count, topology generation)
+surfaced through ``launch/report.py``; the seeded chaos harness
+(:mod:`repro.distributed.chaos`, ``REPRO_CHAOS`` env) drives every branch
+of this policy deterministically in CI.
 
 Skew: the monitor computes the paper's §3.5 statistic (per-node send/recv max
 over mean) from exchange recv-counts; the planner consults Eq. 3 to pick
@@ -41,16 +54,18 @@ import dataclasses
 import time
 
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import backend as B
 from repro.core import perfmodel as pm
 from repro.core.wire import CorruptPayload
-from .chaos import ChaosInjector, FailureKind, FiredFault, TransientFault
+from .chaos import (ChaosInjector, DeviceLost, FailureKind, FiredFault,
+                    TransientFault, _mix, resolve_lost)
 
 __all__ = [
     "QueryRunner", "RunResult", "RunReport", "AttemptReport", "RetryPolicy",
-    "FailureKind", "classify_failure", "choose_exchange", "skew_imbalance",
-    "salt_hot_keys",
+    "FailureKind", "QueryTimeout", "classify_failure", "surviving_mesh",
+    "choose_exchange", "skew_imbalance", "salt_hot_keys",
 ]
 
 
@@ -70,11 +85,37 @@ def classify_failure(exc: BaseException) -> FailureKind:
     treated as a TRANSIENT environment fault and retried — the conservative
     default, bounded by ``RetryPolicy.max_attempts``.
     """
+    if isinstance(exc, DeviceLost):
+        return FailureKind.DEVICE_LOST
     if isinstance(exc, CorruptPayload):
         return FailureKind.CORRUPT
     if isinstance(exc, _DETERMINISTIC_EXC):
         return FailureKind.DETERMINISTIC
     return FailureKind.TRANSIENT
+
+
+class QueryTimeout(RuntimeError):
+    """The runner's OVERALL wall-clock deadline (``QueryRunner.deadline_s``)
+    expired with attempts still in the budget.  Distinct from the
+    per-attempt straggler deadline (``RetryPolicy.deadline_s``), which
+    discards one late attempt; this one ends the query.  Carries the
+    partial :class:`RunReport` so the caller can audit what was tried."""
+
+    def __init__(self, message: str, report: "RunReport"):
+        super().__init__(message)
+        self.report = report
+
+
+def surviving_mesh(mesh: Mesh, lost: tuple[int, ...], axis: str) -> Mesh:
+    """A fresh 1-D mesh over ``axis`` holding every device of ``mesh``
+    except the ``lost`` ranks (ranks index the mesh's flat device order).
+    The surviving devices are kept explicitly — never re-enumerated from
+    the backend, which would resurrect the dead ones."""
+    devices = [d for i, d in enumerate(np.asarray(mesh.devices).flat)
+               if i not in set(lost)]
+    if not devices:
+        raise ValueError(f"no survivors: lost {lost!r} of mesh {mesh.shape}")
+    return Mesh(np.asarray(devices), (axis,))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,17 +127,42 @@ class RetryPolicy:
     straggler — its (correct) result is discarded and the query re-executes,
     the speculative-retry semantics of §2.4 (never applied to the final
     attempt: a late answer beats none).
+
+    ``jitter``: with it on, :meth:`backoff` applies seeded decorrelated
+    jitter — pure exponential backoff synchronizes the retry storms of
+    concurrent runners that failed together.  The jitter is derived from a
+    seed (the runner passes the chaos seed, or ``seed`` here), so chaos
+    runs stay bit-deterministic; it is bounded to
+    ``[backoff_s, max_backoff_s]``.
     """
     max_attempts: int = 4
     backoff_s: float = 0.05       # first TRANSIENT retry waits this long
     backoff_mult: float = 2.0     # then doubles ...
     max_backoff_s: float = 2.0    # ... up to this cap
     deadline_s: float | None = None
+    jitter: bool = False          # seeded decorrelated jitter on backoff
+    seed: int | None = None       # jitter seed override (else: chaos seed)
 
-    def backoff(self, transient_failures: int) -> float:
-        """Sleep before the next attempt after the n-th transient failure."""
-        return min(self.max_backoff_s,
-                   self.backoff_s * self.backoff_mult ** (transient_failures - 1))
+    def backoff(self, transient_failures: int,
+                seed: int | None = None) -> float:
+        """Sleep before the next attempt after the n-th transient failure.
+
+        Without ``jitter`` (or with no seed available): bounded exponential,
+        exactly ``backoff_s * mult^(n-1)`` capped at ``max_backoff_s``.
+        With it: decorrelated jitter — uniform (seeded, deterministic) in
+        ``[backoff_s, min(max_backoff_s, 3 * previous_sleep)]`` — each
+        runner's sequence de-synchronizes from its neighbours' while keeping
+        the same bounds."""
+        exp = min(self.backoff_s * self.backoff_mult
+                  ** (transient_failures - 1), self.max_backoff_s)
+        seed = self.seed if self.seed is not None else seed
+        if not self.jitter or seed is None:
+            return exp
+        prev = self.backoff(transient_failures - 1, seed) \
+            if transient_failures > 1 else self.backoff_s
+        hi = min(self.max_backoff_s, max(self.backoff_s, 3.0 * prev))
+        u = (_mix(seed, "backoff", transient_failures) % 65536) / 65535.0
+        return self.backoff_s + u * (hi - self.backoff_s)
 
 
 @dataclasses.dataclass
@@ -112,6 +178,8 @@ class AttemptReport:
     cut: str | None = None        # chaos cut point, when injected
     snapshots_reused: int = 0     # lineage: exchange snapshots resumed from
     error: str = ""
+    devices: int = 0              # live mesh width this attempt ran on
+    generation: int = 0           # topology generation (0 = boot mesh)
 
 
 @dataclasses.dataclass
@@ -157,7 +225,8 @@ class QueryRunner:
                  join_method: str = "sorted", wire_format: str | None = None,
                  policy: RetryPolicy | None = None,
                  chaos: ChaosInjector | None = None,
-                 lineage=None):
+                 lineage=None, deadline_s: float | None = None,
+                 cluster: pm.ClusterSpec | None = None):
         self.db = db
         self.mesh = mesh
         self.axis = axis
@@ -169,11 +238,45 @@ class QueryRunner:
         self.policy = policy or RetryPolicy(max_attempts=max_attempts)
         self.chaos = chaos if chaos is not None else ChaosInjector.from_env()
         self.lineage = lineage
+        self.deadline_s = deadline_s          # overall wall-clock budget
+        self.cluster = cluster                # perf-model spec, kept at N'
+        self.boot_devices = int(mesh.shape[axis]) if mesh is not None else 1
+        self.topology_generation = 0
+        self.lost_devices: tuple[int, ...] = ()
 
     # retained for callers that introspect the runner
     @property
     def max_attempts(self) -> int:
         return self.policy.max_attempts
+
+    @property
+    def devices(self) -> int:
+        """Live mesh width (N' after topology shrinks, N at boot)."""
+        if self.mesh is None:          # lineage-only eager path
+            return 1
+        return int(self.mesh.shape[self.axis])
+
+    def _jitter_seed(self) -> int | None:
+        if self.policy.seed is not None:
+            return self.policy.seed
+        return self.chaos.plan.seed if self.chaos is not None else None
+
+    def _shrink_topology(self, exc: DeviceLost) -> tuple[int, ...]:
+        """The topology-elastic rung: drop the dead ranks, re-derive the
+        mesh over the survivors, bump the generation, and re-scale the
+        perf-model budgets to the new width.  Returns the resolved dead
+        ranks (empty when nothing can shrink — a 1-device mesh)."""
+        world = self.devices
+        lost = resolve_lost(exc, world)
+        if not lost:
+            return ()
+        self.mesh = surviving_mesh(self.mesh, lost, self.axis)
+        self.topology_generation += 1
+        self.lost_devices = self.lost_devices + lost
+        if self.cluster is not None:
+            # Hockney / Eq. 3 pricing must see N', not the boot-time N
+            self.cluster = self.cluster.with_devices(self.devices)
+        return lost
 
     def _attempt(self, fn, factor: float, wire_format: str | None):
         """Execute one attempt; returns (result, stats, overflow, reused)."""
@@ -182,7 +285,7 @@ class QueryRunner:
             return ln.run_resumable(
                 fn, self.db, self.lineage, capacity_factor=factor,
                 join_method=self.join_method, wire_format=wire_format,
-                chaos=self.chaos)
+                chaos=self.chaos, n_devices=self.devices)
         result, stats, overflow = B.run_distributed(
             fn, self.db, self.mesh, self.axis, capacity_factor=factor,
             packed_exchange=self.packed, join_method=self.join_method,
@@ -214,12 +317,20 @@ class QueryRunner:
         overflow_failures = transient_failures = 0
         t_start = time.perf_counter()
         for attempt in range(1, policy.max_attempts + 1):
+            if self.deadline_s is not None and attempt > 1 and \
+                    time.perf_counter() - t_start > self.deadline_s:
+                raise QueryTimeout(
+                    f"overall deadline {self.deadline_s:.3f}s exceeded "
+                    f"after {attempt - 1} attempts "
+                    f"({time.perf_counter() - t_start:.3f}s)", report)
             if self.chaos is not None:
                 self.chaos.begin_attempt(attempt)
             inference = getattr(fn, "_infer", True) is not False
             rep = AttemptReport(attempt=attempt, outcome="ok", wall_s=0.0,
                                 capacity_factor=factor,
-                                wire_format=wire_format, inference=inference)
+                                wire_format=wire_format, inference=inference,
+                                devices=self.devices,
+                                generation=self.topology_generation)
             report.attempts.append(rep)
             t0 = time.perf_counter()
             try:
@@ -235,12 +346,27 @@ class QueryRunner:
                     raise            # a bug: surface on attempt 1, no retries
                 if attempt >= policy.max_attempts:
                     raise
-                if kind is FailureKind.CORRUPT:
+                if kind is FailureKind.DEVICE_LOST:
+                    # topology-elastic rung: shrink to the survivors and
+                    # re-execute — the database re-partitions over N', and
+                    # the planner re-derives its analysis for the re-run
+                    # (statistics and key_bits are width-invariant; the
+                    # per-device budgets re-price through the cluster spec)
+                    lost = self._shrink_topology(exc)
+                    if not lost:
+                        raise    # 1-device mesh: no survivors to shrink onto
+                    rep.error += (f" [lost {list(lost)} -> "
+                                  f"{self.devices} devices]")
+                    replan = getattr(fn, "info", None)
+                    if callable(replan):
+                        replan(self.db)
+                elif kind is FailureKind.CORRUPT:
                     # never trust the failed buffer: conservative format
                     wire_format = "wide"
                 else:                # TRANSIENT: bounded backoff
                     transient_failures += 1
-                    rep.backoff_s = policy.backoff(transient_failures)
+                    rep.backoff_s = policy.backoff(
+                        transient_failures, seed=self._jitter_seed())
                     time.sleep(rep.backoff_s)
                 continue
             rep.wall_s = time.perf_counter() - t0

@@ -29,6 +29,18 @@ state.
 ``benchmarks/bench_recovery.py`` gates the payoff: resuming a query that
 failed at ``finalize`` must cost < ``MAX_RECOVERY_RATIO`` x the full
 re-execution.
+
+Topology elasticity: every snapshot's pinned config carries the logical
+device width (``n_devices``) the run was targeting, and eager snapshots are
+stored in GLOBAL row order — width-independent by construction.  A resume
+whose config differs ONLY in ``n_devices`` (the device-loss rung shrank the
+mesh N -> N') therefore adopts the snapshot instead of discarding it; the
+next exchange recomputes the partition assignment at N'.  Such adoptions are
+counted in ``LineageStore.resharded`` and gated by
+``bench_recovery.py --check``'s re-shard budget.  For the stacked
+``partition_database`` layout (columns ``(n*cap,)``, counts ``(n,)``) the
+module-level :func:`reshard` / :func:`unshard` pair re-partitions explicitly
+and round-trips byte-identically via a carried ``__rowid`` anchor.
 """
 from __future__ import annotations
 
@@ -41,13 +53,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import backend as B
+from repro.core import plan as qp
 from repro.core import relational as rel
 from repro.core.planner import _walk_signature
 from repro.core.table import Table, to_numpy
 from repro.core.wire import CorruptPayload
 from . import checkpoint as ckpt
 
-__all__ = ["LineageStore", "run_resumable", "plan_fingerprint"]
+__all__ = ["LineageStore", "run_resumable", "plan_fingerprint",
+           "reshard", "unshard"]
 
 
 def _canon_binding(v):
@@ -90,6 +104,93 @@ def _is_traced(x) -> bool:
     return isinstance(x, jax.core.Tracer)
 
 
+def _partition_key_of(node) -> str | None:
+    """Hash-partition key of an exchange node's output; None = replicated
+    (Broadcast) or gathered-to-all (GroupBy via gather) state."""
+    if isinstance(node, qp.Shuffle):
+        return node.key
+    if isinstance(node, qp.GroupBy) and node.exchange == "shuffle":
+        return node.keys[0] if node.keys else None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# stacked-layout re-sharding (the partition_database wire format)
+# ---------------------------------------------------------------------------
+
+ROWID = "__rowid"
+
+
+def unshard(cols: dict, n: int) -> dict:
+    """Stacked shard layout -> one global dict of the valid rows.
+
+    ``cols`` mirrors :func:`repro.core.backend.partition_database` output:
+    data columns shaped ``(n*cap,)`` plus ``__count`` shaped ``(n,)``.
+    Valid rows are concatenated in partition order; when a ``__rowid``
+    anchor column is present the result is re-sorted (stably) to the
+    original global order — that anchor is what makes :func:`reshard`
+    round-trips byte-identical.  Replicated layouts (every shard holds the
+    whole table) come back with ``n`` copies; callers that replicated with
+    ``key=None`` should read shard 0 instead.
+    """
+    counts = np.asarray(cols["__count"]).astype(np.int64)
+    if counts.shape != (n,):
+        raise ValueError(f"__count shape {counts.shape} != ({n},)")
+    data = {k: np.asarray(v) for k, v in cols.items() if k != "__count"}
+    if not data:
+        raise ValueError("no data columns to unshard")
+    cap = next(iter(data.values())).shape[0] // n
+    if np.any(counts > cap) or np.any(counts < 0):
+        raise ValueError(f"counts {counts} exceed shard capacity {cap}")
+    out = {name: np.concatenate([v[d * cap: d * cap + counts[d]]
+                                 for d in range(n)])
+           for name, v in data.items()}
+    if ROWID in out:
+        order = np.argsort(out[ROWID], kind="stable")
+        out = {k: v[order] for k, v in out.items()}
+    return out
+
+
+def reshard(cols: dict, n_old: int, n_new: int, key: str | None,
+            cap: int | None = None) -> dict:
+    """Re-partition a stacked snapshot from ``n_old`` to ``n_new`` shards.
+
+    The degraded-mesh primitive: rows are recovered in global order
+    (see :func:`unshard`), re-assigned with the same splitmix64
+    ``hash_partition_np`` the boot-time partitioner used, and re-stacked at
+    the new width.  A ``__rowid`` anchor column is added on first contact
+    and carried thereafter, so ``N -> N' -> N`` round-trips byte-identically
+    — including masked/empty partitions, which zero-fill their padding just
+    like :func:`repro.core.backend.partition_database`.  ``key=None``
+    replicates the whole table into every shard (tiny dimension tables)."""
+    if n_new < 1:
+        raise ValueError(f"n_new must be >= 1, got {n_new}")
+    glob = unshard(cols, n_old)
+    nrows = len(next(iter(glob.values())))
+    if ROWID not in glob:
+        glob[ROWID] = np.arange(nrows, dtype=np.int64)
+    if key is None:
+        shards = [glob] * n_new
+    else:
+        dest = B.hash_partition_np(np.asarray(glob[key]), n_new)
+        shards = [{k: v[dest == d] for k, v in glob.items()}
+                  for d in range(n_new)]
+    longest = max(len(next(iter(s.values()))) for s in shards)
+    if cap is None:
+        cap = max(8, -(-longest // 8) * 8)
+    elif longest > cap:
+        raise ValueError(f"shard of {longest} rows exceeds cap {cap}")
+    out = {}
+    for name in glob:
+        stacked = np.zeros((n_new * cap,), dtype=glob[name].dtype)
+        for d, s in enumerate(shards):
+            stacked[d * cap: d * cap + len(s[name])] = s[name]
+        out[name] = stacked
+    out["__count"] = np.array([len(next(iter(s.values()))) for s in shards],
+                              dtype=np.int32)
+    return out
+
+
 class LineageStore:
     """Durable post-exchange tables, keyed by plan-walk ordinal.
 
@@ -104,6 +205,7 @@ class LineageStore:
         self.config: dict = {}
         self.reused = 0
         self.saved = 0
+        self.resharded = 0
 
     # -- lifecycle ----------------------------------------------------------
     def begin_plan(self, config: dict) -> None:
@@ -112,17 +214,31 @@ class LineageStore:
         self.config = dict(config)
         self.reused = 0
         self.saved = 0
+        self.resharded = 0
 
     def begin_executor(self, nodes, inference: bool,
                        wire_format: str | None,
-                       bindings: dict | None = None) -> None:
+                       bindings: dict | None = None,
+                       n_devices: int = 1) -> None:
         """Called by ``planner._Executor.run`` (duck-typed: the core layer
         never imports this module) with the plan's walk order, the run's
         configuration legs, and the template parameter bindings (if any) —
-        two bindings of one template must never exchange snapshots."""
+        two bindings of one template must never exchange snapshots.
+        ``n_devices`` is the logical mesh width the run targets; it is the
+        ONE config axis a resume may differ on (see :meth:`load`)."""
         self.begin_plan({"plan": plan_fingerprint(nodes, bindings),
                          "inference": bool(inference),
-                         "wire_format": wire_format})
+                         "wire_format": wire_format,
+                         "n_devices": int(n_devices)})
+
+    def _width_only_mismatch(self, cfg) -> bool:
+        """True when ``cfg`` differs from the pinned config ONLY in the
+        logical device width — the topology-shrink resume case."""
+        if not isinstance(cfg, dict) or cfg == self.config:
+            return False
+        a = {k: v for k, v in cfg.items() if k != "n_devices"}
+        b = {k: v for k, v in self.config.items() if k != "n_devices"}
+        return a == b
 
     def clear(self) -> None:
         shutil.rmtree(self.dir, ignore_errors=True)
@@ -137,16 +253,27 @@ class LineageStore:
             flat, meta = ckpt.restore_flat(self.dir, tag)
         except (IOError, ValueError, OSError):
             return None          # torn/foreign snapshot: fall back to re-exec
-        if meta.get("config") != self.config:
-            return None          # other leg (inference/wire/plan): not ours
+        cfg = meta.get("config")
+        if cfg != self.config:
+            if not self._width_only_mismatch(cfg):
+                return None      # other leg (inference/wire/plan): not ours
+            # Topology shrink (N -> N'): eager snapshots are stored in
+            # global row order, so the table itself is width-independent —
+            # adopt it; downstream exchanges recompute the partition
+            # assignment at N'.  This is the re-shard resume the recovery
+            # benchmark gates against full re-execution.
+            self.resharded += 1
         count = flat.pop("__count").reshape(()).astype(jnp.int32)
         valid = flat.pop("__valid", None)
         self.reused += 1
         return Table(flat, count, valid)
 
-    def save(self, tag: int, table, ctx) -> None:
+    def save(self, tag: int, table, ctx, node=None) -> None:
         """Persist a post-exchange table — only when it is durable state:
-        concrete (not a Tracer: eager execution only) and overflow-free."""
+        concrete (not a Tracer: eager execution only) and overflow-free.
+        ``node`` (the plan exchange node, when the executor passes it)
+        contributes partition metadata — the shuffle key and targeted width
+        — so out-of-band tooling can re-shard the snapshot explicitly."""
         if not isinstance(table, Table):
             return
         leaves = list(table.columns.values()) + [table.count]
@@ -158,8 +285,12 @@ class LineageStore:
         flat["__count"] = np.asarray(table.count)
         if table.valid is not None:
             flat["__valid"] = np.asarray(table.valid)
-        ckpt.save(self.dir, tag, flat,
-                  metadata={"keys": sorted(flat), "config": self.config})
+        meta = {"keys": sorted(flat), "config": self.config}
+        if node is not None:
+            meta["partition"] = {
+                "key": _partition_key_of(node),
+                "n": int(self.config.get("n_devices", 1))}
+        ckpt.save(self.dir, tag, flat, metadata=meta)
         self.saved += 1
 
 
@@ -167,6 +298,7 @@ def run_resumable(query_fn, db, store: LineageStore,
                   capacity_factor: float = 2.0, join_method: str = "sorted",
                   use_kernel: bool | None = None,
                   wire_format: str | None = None, chaos=None,
+                  n_devices: int = 1,
                   ) -> tuple[dict, B.PlanStats, bool, int]:
     """One eager single-device attempt with lineage snapshots armed.
 
@@ -174,7 +306,10 @@ def run_resumable(query_fn, db, store: LineageStore,
     runner's attempt signature.  A payload integrity failure raises
     :class:`CorruptPayload` exactly like the drivers in ``core.backend``.
     A resumed attempt's PlanStats cover only the re-executed suffix (skipped
-    subtrees issue no exchanges).
+    subtrees issue no exchanges).  ``n_devices`` is the logical mesh width
+    this attempt targets: it is pinned into the snapshot config
+    (``ctx.lineage_devices``), so a post-shrink resume at N' re-adopts
+    snapshots written at N through the store's re-shard path.
     """
     tables = B._np_db_to_tables(db)
     ctx = B.LocalContext(db, tables, capacity_factor=capacity_factor,
@@ -182,6 +317,7 @@ def run_resumable(query_fn, db, store: LineageStore,
                          wire_format=wire_format)
     ctx.chaos = chaos
     ctx.lineage = store
+    ctx.lineage_devices = int(n_devices)
     out = query_fn(ctx)
     if isinstance(out, dict):
         out = Table({k: jnp.asarray(v).reshape(1) for k, v in out.items()},

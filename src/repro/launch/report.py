@@ -112,8 +112,8 @@ def run_report_table(recs):
     """Per-attempt audit of fault-runner executions: what failed, where the
     chaos harness injected it, and how the policy recovered."""
     print("| query | attempt | outcome | cut | factor | wire | inference |"
-          " wall | backoff | snapshots | error |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|")
+          " wall | backoff | snapshots | devices | gen | error |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in recs:
         for a in r.get("attempts", []):
             print(f"| {r.get('query', '?')} | {a['attempt']} "
@@ -125,6 +125,8 @@ def run_report_table(recs):
                   f"| {a['wall_s'] * 1e3:.0f}ms "
                   f"| {a['backoff_s'] * 1e3:.0f}ms "
                   f"| {a.get('snapshots_reused', 0)} "
+                  f"| {a.get('devices', 0) or '-'} "
+                  f"| {a.get('generation', 0)} "
                   f"| {a.get('error', '')[:40]} |")
 
 

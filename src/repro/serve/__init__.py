@@ -15,15 +15,21 @@ Entry points:
     path (jit once per template, bindings as traced scalars) and the eager
     batch path (cross-query subplan memo), both overflow-recovering
     (``server.py``).
+  * :class:`AdmissionGate` + :class:`Served` / :class:`Degraded` /
+    :class:`Shed` — capacity-aware admission on a degraded topology: one
+    re-trace per (template, topology generation), oversized requests shed
+    or queued as structured outcomes (``server.py``).
 
     PYTHONPATH=src python benchmarks/bench_serve.py --check
 """
 from .cache import PlanCache
-from .server import BatchExecutor, QueryServer
+from .server import (AdmissionGate, BatchExecutor, Degraded, QueryServer,
+                     Served, Shed)
 from .templates import (BoundQuery, PlanTemplate, TEMPLATES,
                         resolve_bindings, template_for)
 
 __all__ = [
     "PlanTemplate", "BoundQuery", "TEMPLATES", "template_for",
     "resolve_bindings", "PlanCache", "QueryServer", "BatchExecutor",
+    "AdmissionGate", "Served", "Degraded", "Shed",
 ]

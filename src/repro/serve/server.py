@@ -25,13 +25,27 @@ Two execution paths, one correctness story:
     wire legs); an overflowing request forfeits its memo contributions and
     re-runs conservatively in isolation, so a lying bound can never poison a
     neighbour.
+
+Topology awareness: the server carries a logical device width and a
+monotonically increasing ``topology_generation``.  Losing devices
+(:meth:`QueryServer.degrade`) bumps the generation — which is part of the
+executable cache key, so every template re-traces exactly ONCE per
+(template, generation), never per request — and re-prices the per-device
+footprint.  With an :class:`AdmissionGate` configured,
+:meth:`QueryServer.submit_guarded` returns structured outcomes instead of
+opaque errors: :class:`Served` (full-width topology), :class:`Degraded`
+(answered, but on a shrunken topology), or :class:`Shed` (declined or
+queued because the estimated per-device footprint no longer fits the
+degraded cluster; queued requests re-admit via :meth:`drain_backlog`).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as B
 from repro.core import planner
@@ -41,7 +55,8 @@ from repro.core.wire import CorruptPayload
 from .cache import PlanCache
 from .templates import BoundQuery, PlanTemplate, TEMPLATES
 
-__all__ = ["QueryServer", "BatchExecutor"]
+__all__ = ["QueryServer", "BatchExecutor", "AdmissionGate",
+           "Served", "Degraded", "Shed"]
 
 _PDTYPE = {"int64": jnp.int64, "float64": jnp.float64}
 
@@ -53,13 +68,67 @@ def _as_table(out):
     return rel.ensure_compact(out)
 
 
+@dataclasses.dataclass(frozen=True)
+class AdmissionGate:
+    """Per-device memory budget for admission control.
+
+    ``hbm_bytes`` is the accelerator memory per device; a request is
+    admitted while the server's estimated per-device footprint — database
+    partition plus capacity-scaled working buffers — stays within
+    ``headroom * hbm_bytes``.  After a topology shrink N -> N' the
+    footprint grows by N/N', which is exactly what pushes oversized
+    requests into :class:`Shed`."""
+    hbm_bytes: float
+    headroom: float = 0.8
+
+    @property
+    def budget_bytes(self) -> float:
+        return self.headroom * self.hbm_bytes
+
+
+@dataclasses.dataclass
+class Served:
+    """Request answered on the full-width (boot) topology."""
+    name: str
+    result: dict
+    devices: int
+    generation: int = 0
+
+
+@dataclasses.dataclass
+class Degraded:
+    """Request answered correctly, but on a shrunken topology — the caller
+    sees degraded capacity/latency, never a degraded answer."""
+    name: str
+    result: dict
+    devices: int
+    generation: int
+    lost: int = 0                 # devices below boot width
+
+
+@dataclasses.dataclass
+class Shed:
+    """Request NOT executed: its estimated footprint does not fit the
+    current (degraded) cluster.  ``queued`` means it sits in the server
+    backlog and re-admits via :meth:`QueryServer.drain_backlog` once
+    capacity returns."""
+    name: str
+    reason: str
+    estimated_bytes: float
+    budget_bytes: float
+    devices: int
+    generation: int
+    queued: bool = False
+
+
 class QueryServer:
     """Serve parameterized queries from jit-compiled template executables."""
 
     def __init__(self, db, capacity_factor: float = 2.0,
                  join_method: str = "sorted", use_kernel: bool | None = None,
                  wire_format: str | None = None,
-                 cache: PlanCache | None = None):
+                 cache: PlanCache | None = None,
+                 devices: int = 1, gate: AdmissionGate | None = None):
         self.db = db
         self.capacity_factor = capacity_factor
         self.join_method = join_method
@@ -70,10 +139,55 @@ class QueryServer:
         self.cache_hits = 0
         self.overflow_reruns = 0
         self._tables = B._np_db_to_tables(db)
+        # topology state: logical width this server answers on behalf of
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        self.boot_devices = int(devices)
+        self.devices = int(devices)
+        self.topology_generation = 0
+        self.gate = gate
+        self.shed_count = 0
+        self.backlog: list[tuple[PlanTemplate, dict | None, bool | None]] = []
+        self._db_bytes = float(sum(
+            np.asarray(col).nbytes
+            for t in db.tables.values() for col in t.values()))
+
+    # -- topology -----------------------------------------------------------
+    def degrade(self, devices: int) -> int:
+        """Shrink the logical topology to ``devices`` survivors.  Bumps the
+        topology generation — every template re-traces exactly once against
+        the new generation (the generation is in the executable cache key).
+        Returns the new generation."""
+        if not 1 <= devices <= self.devices:
+            raise ValueError(
+                f"degrade to {devices} from {self.devices} devices")
+        if devices != self.devices:
+            self.devices = int(devices)
+            self.topology_generation += 1
+        return self.topology_generation
+
+    def restore(self, devices: int | None = None) -> int:
+        """Recovered capacity (default: back to boot width).  A new
+        generation as well — the topology changed."""
+        devices = self.boot_devices if devices is None else int(devices)
+        if devices < 1:
+            raise ValueError(f"restore to {devices} devices")
+        if devices != self.devices:
+            self.devices = devices
+            self.topology_generation += 1
+        return self.topology_generation
+
+    def footprint_bytes(self, factor: float | None = None) -> float:
+        """Estimated per-device footprint at the live width: the device's
+        database partition plus exchange/join working buffers, which the
+        engine sizes as ``capacity_factor`` x the partition."""
+        factor = self.capacity_factor if factor is None else factor
+        return self._db_bytes / self.devices * (1.0 + float(factor))
 
     def _executable(self, template: PlanTemplate, infer: bool, factor: float):
         key = ("exe", template.signature(), bool(infer), self.wire_format,
-               float(factor), self.join_method, self.use_kernel)
+               float(factor), self.join_method, self.use_kernel,
+               self.topology_generation)
         fn = self.cache.get(self.db, key)
         if fn is None:
             fn = self._compile(template, infer, factor)
@@ -135,6 +249,54 @@ class QueryServer:
     def serve(self, requests, infer: bool | None = None) -> list[dict]:
         """Submit a stream of ``(template_or_qid, bindings)`` requests."""
         return [self.submit(t, b, infer=infer) for t, b in requests]
+
+    # -- capacity-aware admission ------------------------------------------
+    def submit_guarded(self, template: PlanTemplate | int,
+                       bindings: dict[str, Any] | None = None,
+                       infer: bool | None = None,
+                       queue: bool = True) -> Served | Degraded | Shed:
+        """Admission-gated submit with structured outcomes.
+
+        With no :class:`AdmissionGate` configured every request is admitted.
+        Otherwise a request whose estimated per-device footprint exceeds the
+        gate's budget at the LIVE width is not executed: it is queued on the
+        server backlog (``queue=True``, the default) or declined outright —
+        both surfaced as :class:`Shed`, never as an opaque error.  Admitted
+        requests on a shrunken topology come back :class:`Degraded`."""
+        if isinstance(template, int):
+            template = TEMPLATES[template]
+        if self.gate is not None:
+            est = self.footprint_bytes()
+            if est > self.gate.budget_bytes:
+                self.shed_count += 1
+                if queue:
+                    self.backlog.append((template, bindings, infer))
+                return Shed(
+                    name=template.name, queued=queue,
+                    reason=(f"estimated per-device footprint "
+                            f"{est / 1e6:.1f} MB exceeds budget "
+                            f"{self.gate.budget_bytes / 1e6:.1f} MB at "
+                            f"{self.devices} devices"),
+                    estimated_bytes=est,
+                    budget_bytes=self.gate.budget_bytes,
+                    devices=self.devices,
+                    generation=self.topology_generation)
+        result = self.submit(template, bindings, infer=infer)
+        if self.devices < self.boot_devices:
+            return Degraded(name=template.name, result=result,
+                            devices=self.devices,
+                            generation=self.topology_generation,
+                            lost=self.boot_devices - self.devices)
+        return Served(name=template.name, result=result,
+                      devices=self.devices,
+                      generation=self.topology_generation)
+
+    def drain_backlog(self) -> list[Served | Degraded | Shed]:
+        """Re-admit queued requests (after :meth:`restore` or a capacity
+        change).  Requests that still do not fit go back on the backlog."""
+        pending, self.backlog = self.backlog, []
+        return [self.submit_guarded(t, b, infer=i, queue=True)
+                for t, b, i in pending]
 
 
 class _SharedMemoExecutor(planner._Executor):
