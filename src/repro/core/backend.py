@@ -724,8 +724,8 @@ def _np_db_to_tables(db: Database, pad: float = 1.0) -> dict[str, Table]:
 def run_local(query_fn, db: Database, jit: bool = True,
               join_method: str = "sorted", use_kernel: bool | None = None,
               capacity_factor: float = 2.0, wire_format: str | None = None,
-              chaos=None,
-              ) -> tuple[dict, PlanStats]:
+              chaos=None, return_overflow: bool = False,
+              ) -> tuple[dict, PlanStats] | tuple[dict, PlanStats, bool]:
     tables = _np_db_to_tables(db)
     holder = {}
 
@@ -745,6 +745,10 @@ def run_local(query_fn, db: Database, jit: bool = True,
     out, overflow, corrupt = fn(tables)
     if bool(corrupt):
         raise wi.CorruptPayload("local run: payload integrity check failed")
+    if return_overflow:
+        # policy-loop callers (QueryRunner on a mesh-less topology) answer
+        # overflow with capacity escalation instead of an assert
+        return to_numpy(out), holder["stats"], bool(overflow)
     assert not bool(overflow), "capacity overflow in local run"
     return to_numpy(out), holder["stats"]
 

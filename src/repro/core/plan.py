@@ -60,7 +60,17 @@ __all__ = [
     "scan", "col", "lit", "scode", "isin", "like", "starts_with",
     "ends_with", "alpha_rank", "year", "where", "db_scale", "result",
     "param",
+    # reserved sample-ladder bookkeeping columns (repro.approx)
+    "SAMPLE_WEIGHT_COL", "SAMPLE_M_COL", "SAMPLE_N_COL",
 ]
+
+# Reserved column names carried by stratified sample tables
+# (repro.approx.sampling): the Horvitz-Thompson scale-up weight n_g/m_g, the
+# pre-filter per-stratum sample size m_g, and the true stratum size n_g.
+# Plan authors must not define columns with these names.
+SAMPLE_WEIGHT_COL = "__sw"
+SAMPLE_M_COL = "__sm"
+SAMPLE_N_COL = "__sn"
 
 
 # ---------------------------------------------------------------------------

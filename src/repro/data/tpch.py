@@ -20,7 +20,11 @@ import numpy as np
 
 from repro.core.table import Database, days
 
-__all__ = ["generate", "NATIONS", "REGIONS", "NATION_REGION"]
+__all__ = ["generate", "FACT_TABLES", "NATIONS", "REGIONS", "NATION_REGION"]
+
+# The big tables worth sampling: the approx ladder (repro.approx) builds its
+# stratified rungs over these; dimension tables always run exact.
+FACT_TABLES = ("lineitem", "orders", "partsupp")
 
 REGIONS = np.array(["AFRICA", "AMERICA", "ASIA", "EUROPE", "MIDDLE EAST"])
 NATIONS = np.array([

@@ -84,12 +84,18 @@ class FailureKind(enum.Enum):
                    on the same topology can only fail again — shrink the
                    mesh to the survivors, re-plan at the new width, and
                    re-execute (the topology-elastic rung).
+    TOLERANCE_MISS an approximate answer's confidence interval exceeded the
+                   caller's tolerance (repro.approx.progressive): not an
+                   execution failure — the attempt ran clean — but the
+                   outcome climbs the sample ladder to the next larger rung
+                   the way OVERFLOW climbs the capacity factor.
     """
     TRANSIENT = "transient"
     OVERFLOW = "overflow"
     CORRUPT = "corrupt"
     DETERMINISTIC = "deterministic"
     DEVICE_LOST = "device_lost"
+    TOLERANCE_MISS = "tolerance_miss"
 
 
 class TransientFault(RuntimeError):

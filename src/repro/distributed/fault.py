@@ -180,6 +180,8 @@ class AttemptReport:
     error: str = ""
     devices: int = 0              # live mesh width this attempt ran on
     generation: int = 0           # topology generation (0 = boot mesh)
+    rung: int = 0                 # approx ladder denominator (0 = exact plan)
+    ci_width: float | None = None  # rel. CI half-width of an approx answer
 
 
 @dataclasses.dataclass
@@ -226,7 +228,8 @@ class QueryRunner:
                  policy: RetryPolicy | None = None,
                  chaos: ChaosInjector | None = None,
                  lineage=None, deadline_s: float | None = None,
-                 cluster: pm.ClusterSpec | None = None):
+                 cluster: pm.ClusterSpec | None = None,
+                 local_jit: bool = True):
         self.db = db
         self.mesh = mesh
         self.axis = axis
@@ -243,6 +246,7 @@ class QueryRunner:
         self.boot_devices = int(mesh.shape[axis]) if mesh is not None else 1
         self.topology_generation = 0
         self.lost_devices: tuple[int, ...] = ()
+        self.local_jit = local_jit    # mesh-less single-device attempts
 
     # retained for callers that introspect the runner
     @property
@@ -286,6 +290,15 @@ class QueryRunner:
                 fn, self.db, self.lineage, capacity_factor=factor,
                 join_method=self.join_method, wire_format=wire_format,
                 chaos=self.chaos, n_devices=self.devices)
+        if self.mesh is None:
+            # mesh-less runner (the progressive approx ladder's default):
+            # single-device execution under the SAME policy loop — overflow
+            # is returned, not asserted, so capacity escalation still works
+            result, stats, overflow = B.run_local(
+                fn, self.db, jit=self.local_jit, capacity_factor=factor,
+                join_method=self.join_method, wire_format=wire_format,
+                chaos=self.chaos, return_overflow=True)
+            return result, stats, overflow, 0
         result, stats, overflow = B.run_distributed(
             fn, self.db, self.mesh, self.axis, capacity_factor=factor,
             packed_exchange=self.packed, join_method=self.join_method,

@@ -108,20 +108,36 @@ def load_runs():
             for f in sorted(glob.glob(os.path.join(RUNS, "*.json")))]
 
 
+def _fmt_ci(ci) -> str:
+    """CI half-width cell: '-' when not an approx attempt, 'inf' when the
+    sample could not support a variance estimate."""
+    if ci is None:
+        return "-"
+    ci = float(ci)
+    if ci != ci or ci == float("inf"):
+        return "inf"
+    return f"{100 * ci:.2f}%"
+
+
 def run_report_table(recs):
     """Per-attempt audit of fault-runner executions: what failed, where the
-    chaos harness injected it, and how the policy recovered."""
+    chaos harness injected it, which sample-ladder rung answered (approx
+    runs), and how the policy recovered."""
     print("| query | attempt | outcome | cut | factor | wire | inference |"
-          " wall | backoff | snapshots | devices | gen | error |")
-    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+          " rung | ci | wall | backoff | snapshots | devices | gen |"
+          " error |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
     for r in recs:
         for a in r.get("attempts", []):
+            rung = a.get("rung", 0)
             print(f"| {r.get('query', '?')} | {a['attempt']} "
                   f"| {a['outcome']} "
                   f"| {a.get('cut') or '-'} "
                   f"| {a['capacity_factor']:.2f} "
                   f"| {a.get('wire_format') or 'env'} "
                   f"| {'on' if a.get('inference', True) else 'off'} "
+                  f"| {f'1/{rung}' if rung else 'exact'} "
+                  f"| {_fmt_ci(a.get('ci_width'))} "
                   f"| {a['wall_s'] * 1e3:.0f}ms "
                   f"| {a['backoff_s'] * 1e3:.0f}ms "
                   f"| {a.get('snapshots_reused', 0)} "

@@ -138,6 +138,9 @@ class QueryServer:
         self.recompiles = 0          # jit traces (counted inside the trace)
         self.cache_hits = 0
         self.overflow_reruns = 0
+        self.approx_served = 0       # answers served off a sample rung
+        self.approx_escalations = 0  # tolerance misses climbed past
+        self.approx_refused = 0      # non-estimable shapes served exact
         self._tables = B._np_db_to_tables(db)
         # topology state: logical width this server answers on behalf of
         if devices < 1:
@@ -216,8 +219,19 @@ class QueryServer:
 
     def submit(self, template: PlanTemplate | int,
                bindings: dict[str, Any] | None = None,
-               infer: bool | None = None) -> dict:
-        """Execute one parameterized request; returns the numpy result."""
+               infer: bool | None = None,
+               tolerance: float | None = None,
+               confidence: float = 0.95) -> dict:
+        """Execute one parameterized request; returns the numpy result.
+
+        ``tolerance=`` opts into approximate serving: the answer comes from
+        the smallest sample rung whose relative CI half-width (at
+        ``confidence``) fits the tolerance, escalating up the ladder
+        otherwise — each rung a separately-cached executable (the rung is in
+        the cache key, so approximate and exact artifacts never collide).
+        Plans the rewrite pass refuses run exact.  Default tolerance comes
+        from ``REPRO_APPROX`` (unset = exact serving).
+        """
         if isinstance(template, int):
             template = TEMPLATES[template]
         if infer is None:
@@ -227,6 +241,15 @@ class QueryServer:
         # present, so the pytree structure (and hence the trace) is stable
         pvals = {name: jnp.asarray(v, _PDTYPE[template.params[name].dtype])
                  for name, v in bound.values.items()}
+        if tolerance is None:
+            from repro.approx.progressive import approx_default
+            tolerance = approx_default()
+        if tolerance is not None:
+            res = self._submit_approx(template, pvals, infer,
+                                      float(tolerance), confidence)
+            if res is not None:
+                return res
+            self.approx_refused += 1
         fn = self._executable(template, infer, self.capacity_factor)
         out, overflow, corrupt = fn(self._tables, pvals)
         if bool(overflow):
@@ -246,9 +269,93 @@ class QueryServer:
                 f"rerun (capacity_factor={self.capacity_factor * 4.0})")
         return to_numpy(out)
 
-    def serve(self, requests, infer: bool | None = None) -> list[dict]:
+    # -- approximate serving (repro.approx) --------------------------------
+    def _approx_rewrite(self, template: PlanTemplate, den: int):
+        """Rung rewrite of a template, cached (and invalidated) with the
+        statistics it was derived from."""
+        from repro.approx import rewrite as AR
+        from repro.approx import sampling as AS
+        key = ("approx-rw", template.signature(), int(den), AS.DEFAULT_SEED)
+        got = self.cache.get(self.db, key)
+        if got is None:
+            rw = AR.rewrite_for_rung(template.query, self.db, den)
+            self.cache.put(self.db, key, ("rw", rw))
+        else:
+            self.cache_hits += 1
+            rw = got[1]
+        return rw
+
+    def _approx_executable(self, template: PlanTemplate, rw, infer: bool,
+                           factor: float):
+        from repro.approx import sampling as AS
+        tkey = ("approx-tables", rw.table, rw.strata, int(rw.den),
+                AS.DEFAULT_SEED)
+        tables = self.cache.get(self.db, tkey)
+        if tables is None:
+            tables = B._np_db_to_tables(rw.db)
+            self.cache.put(self.db, tkey, tables)
+        # the rung is part of the key: approximate and exact executables
+        # (and different rungs) never collide in the cache
+        key = ("exe-approx", template.signature(), int(rw.den), bool(infer),
+               self.wire_format, float(factor), self.join_method,
+               self.use_kernel, self.topology_generation)
+        fn = self.cache.get(self.db, key)
+        if fn is None:
+            query, rdb = rw.query, rw.db
+            info = query.info(rdb) if infer else None
+
+            def run(tables, pvals):
+                self.recompiles += 1
+                ctx = B.LocalContext(rdb, tables, capacity_factor=factor,
+                                     join_method=self.join_method,
+                                     use_kernel=self.use_kernel,
+                                     wire_format=self.wire_format)
+                out = planner._Executor(ctx, info, params=pvals).run(
+                    query.plan)
+                return _as_table(out), ctx.overflow, ctx.corrupt
+
+            fn = jax.jit(run)
+            self.cache.put(self.db, key, fn)
+        else:
+            self.cache_hits += 1
+        return fn, tables
+
+    def _submit_approx(self, template: PlanTemplate, pvals: dict,
+                       infer: bool, tolerance: float,
+                       confidence: float) -> dict | None:
+        """Climb the sample ladder; None means the shape refused (go exact)."""
+        from repro.approx import sampling as AS
+        for den in AS.LADDER:
+            rw = self._approx_rewrite(template, den)
+            if rw is None:
+                return None
+            fn, tables = self._approx_executable(
+                template, rw, infer, self.capacity_factor)
+            out, overflow, corrupt = fn(tables, pvals)
+            if bool(overflow):
+                self.overflow_reruns += 1
+                fn, tables = self._approx_executable(
+                    template, rw, False, self.capacity_factor * 4.0)
+                out, overflow, corrupt = fn(tables, pvals)
+            if bool(corrupt):
+                raise CorruptPayload(
+                    "serve: payload integrity check failed")
+            if bool(overflow):
+                raise RuntimeError(
+                    f"{template.name}~r{den}: overflow persists on the "
+                    f"conservative rerun")
+            est = rw.finalize(to_numpy(out), confidence)
+            if est.rel_width <= tolerance or den == 1:
+                self.approx_served += 1
+                return est.result
+            self.approx_escalations += 1
+        return None    # unreachable: the den == 1 rung always answers
+
+    def serve(self, requests, infer: bool | None = None,
+              tolerance: float | None = None) -> list[dict]:
         """Submit a stream of ``(template_or_qid, bindings)`` requests."""
-        return [self.submit(t, b, infer=infer) for t, b in requests]
+        return [self.submit(t, b, infer=infer, tolerance=tolerance)
+                for t, b in requests]
 
     # -- capacity-aware admission ------------------------------------------
     def submit_guarded(self, template: PlanTemplate | int,

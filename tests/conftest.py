@@ -1,7 +1,20 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # NOTE: XLA_FLAGS / device-count overrides are NOT set here — smoke tests and
 # benches must see the real single device.  Multi-device tests spawn
 # subprocesses that set XLA_FLAGS before importing jax.
+
+# The statistical approx suite (tests/test_approx.py) is pinned to one seed:
+# the empirical coverage rates it asserts are exact deterministic numbers at
+# this seed, not flaky draws.  Change the seed only together with the
+# documented binomial-slack analysis in that file.
+APPROX_SEED = 20260807
+
+
+@pytest.fixture(scope="session")
+def approx_seed():
+    return APPROX_SEED

@@ -13,7 +13,11 @@ Checks, each fatal:
   4. every public SQL-frontend entry point (``repro.sql.__all__``) is named
      in README.md (same rule for the SQL quickstart section);
   5. ``git ls-files`` reports no ``*.pyc`` / ``__pycache__`` entries
-     (commit ebdc242 shipped bytecode once; never again).
+     (commit ebdc242 shipped bytecode once; never again);
+  6. every per-run switch in ``PER_RUN_SWITCHES`` (the ``join_method=`` /
+     ``tolerance=`` keyword arguments that behave like flags but travel as
+     arguments) is documented in README.md AND still accepted somewhere in
+     ``src/`` as a keyword parameter.
 
     python tools/check_docs.py
 """
@@ -27,6 +31,10 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FLAG_RE = re.compile(r"\bREPRO_[A-Z_]+\b")
+
+# keyword arguments that act as engine switches (README documents them in the
+# same flag matrix as the env vars)
+PER_RUN_SWITCHES = ("join_method", "tolerance")
 
 
 def flags_in_src() -> set[str]:
@@ -94,6 +102,21 @@ def main() -> int:
     if missing_sql:
         errors.append(f"SQL entry points (repro.sql.__all__) missing "
                       f"from README: {missing_sql}")
+    src_text = []
+    for dirpath, dirnames, filenames in os.walk(os.path.join(ROOT, "src")):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for f in filenames:
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f)) as fh:
+                    src_text.append(fh.read())
+    src_text = "\n".join(src_text)
+    for switch in PER_RUN_SWITCHES:
+        if f"`{switch}=`" not in readme_text:
+            errors.append(f"per-run switch `{switch}=` missing from the "
+                          f"README flag matrix")
+        if not re.search(rf"\b{switch}\s*[:=]", src_text):
+            errors.append(f"per-run switch `{switch}=` documented but no "
+                          f"longer accepted anywhere in src/")
     pyc = tracked_bytecode()
     if pyc:
         errors.append(f"tracked bytecode files: {pyc[:5]}"
