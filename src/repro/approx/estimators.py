@@ -33,7 +33,9 @@ Honesty gate: a group whose sample cannot support a variance estimate
 can never satisfy a tolerance, which forces the progressive runner to climb.
 A fully-sampled group (``m == n``) reports half-width 0.  Groups with no
 post-filter sample rows are simply absent from the output — never fabricated
-as zeros.
+as zeros.  And a scale-rewritten result that arrives WITHOUT its moment
+columns (a projection dropped them) makes :func:`finalize_result` raise —
+a scaled (den > 1) estimate must never be reported as exact.
 """
 
 from __future__ import annotations
@@ -207,17 +209,27 @@ class ApproxEstimate:
         return self.rel_width == 0.0
 
 
-def finalize_result(cols, targets, confidence: float = 0.95) -> ApproxEstimate:
+def finalize_result(cols, targets, confidence: float = 0.95,
+                    scaled: bool = False) -> ApproxEstimate:
     """Turn a raw rewritten-query result into estimates with error bars.
 
     ``cols`` is the numpy result dict of the rewritten plan; ``targets`` is
-    the rewrite's list of ``(name, op)`` pairs.  A result without moment
-    columns (the rung-1 / refused case) is passed through exact with zero
-    width.  Scalar results arrive as length-1 arrays and need no special
-    casing.
+    the rewrite's list of ``(name, op)`` pairs.  ``scaled`` says the targets
+    were scale-rewritten (``den > 1``): then the moment columns MUST be
+    present for every served target — a result that lost them (a projection
+    the rewrite failed to guard) raises rather than masquerade a
+    Horvitz-Thompson estimate as an exact zero-width answer.  With
+    ``scaled=False`` a result without moment columns (the rung-1 / refused
+    case) is passed through exact with zero width.  Scalar results arrive as
+    length-1 arrays and need no special casing.
     """
     cols = {k: np.asarray(v) for k, v in cols.items()}
     if N_COL not in cols:
+        if scaled:
+            raise ValueError(
+                "approx: targets were scale-rewritten but the __ap_* moment "
+                "columns are missing from the result — a projection dropped "
+                "them; refusing to report a scaled estimate as exact")
         clean = {k: v for k, v in cols.items()
                  if not k.startswith(MOMENT_PREFIX)}
         return ApproxEstimate(clean, {t[0]: np.zeros(0) for t in targets},
@@ -227,10 +239,15 @@ def finalize_result(cols, targets, confidence: float = 0.95) -> ApproxEstimate:
     worst = 0.0
     for name, op in targets:
         if name not in cols:
-            continue   # a downstream projection dropped this target
+            continue   # a projection dropped this target: it is not served
         s1 = cols.get(s1_col(name))
         s2 = cols.get(s2_col(name))
         if s1 is None and op != "count":
+            if scaled:
+                raise ValueError(
+                    f"approx: scaled target {name!r} is served but its "
+                    f"__ap_s1/__ap_s2 moments were projected away — no "
+                    f"error bar is attachable")
             continue   # moments projected away: no bar attachable
         est, hw = interval(op, n, m, mf, s1, s2, confidence)
         half[name] = hw

@@ -86,6 +86,12 @@ class ProgressiveRunner:
         self.ladder = tuple(sorted(set(int(d) for d in ladder), reverse=True))
         if not self.ladder or self.ladder[-1] != 1:
             raise ValueError(f"ladder must end at rung 1, got {ladder}")
+        bad = [d for d in self.ladder if d not in sampling.LADDER]
+        if bad:
+            # fail here, not mid-run(): rewrite_for_rung rejects off-ladder
+            # denominators, so a bad custom ladder must never start climbing
+            raise ValueError(f"ladder rungs {bad} are not on the sampling "
+                             f"ladder {sampling.LADDER}")
         self.seed = seed
         self.min_rows = min_rows
         self.tables = tables

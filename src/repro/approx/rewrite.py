@@ -21,12 +21,22 @@ is not estimable:
 * the chain from site to scan passes through a join/semi/anti/rename or any
   other non-unary operator (semi/anti-dependent counts cannot be scaled by a
   per-stratum weight);
+* the site's output reaches the root through anything but projections and
+  ``Finalize`` — a ``Filter`` (SQL HAVING), join, or expression consuming a
+  scaled estimate would decide group membership / exact downstream results
+  from an un-barred estimate (q18's ``sum_qty > 300`` is the canonical
+  refusal);
 * zero or multiple candidate sites, or the scan/chain is shared with another
   consumer (the sample would leak into non-aggregate outputs);
 * the scanned table is too small (``min_rows``) — tiny inferred domains are
   cheaper exact than estimated;
 * a group key that is not a raw integer column of the fact table (it could
   not have been a stratification key).
+
+A ``Select`` between the site and the root (SQL lowering emits one whenever
+the SELECT list reorders or omits GroupBy outputs) is rebuilt with the
+moment columns appended, so the error-bar evidence is never projected away
+between the site and :func:`repro.approx.estimators.finalize_result`.
 
 ``den == 1`` is special-cased to a pure scan rename (the rung-1 "sample" is
 the full table, row order preserved): no scale-up, no moment columns — the
@@ -67,7 +77,10 @@ class ApproxRewrite:
     targets: tuple                   # (name, op) per estimable aggregate
 
     def finalize(self, cols, confidence: float = 0.95) -> E.ApproxEstimate:
-        return E.finalize_result(cols, self.targets, confidence)
+        # den > 1 means the targets are scale-rewritten: finalize must find
+        # the moment columns or raise — never serve an estimate as exact
+        return E.finalize_result(cols, self.targets, confidence,
+                                 scaled=self.den > 1)
 
 
 def _default_tables():
@@ -126,6 +139,47 @@ def _find_site(root, db, tables, min_rows):
     if len(candidates) != 1:
         return None
     return candidates[0]
+
+
+def _estimate_consumers(root, site):
+    """Every node through which ``site``'s output flows on its way to the
+    root — child edges and expression-embedded scalar references alike.
+    ``site`` itself is excluded."""
+    memo: dict[int, bool] = {}
+
+    def reaches(n):
+        got = memo.get(id(n))
+        if got is not None:
+            return got
+        memo[id(n)] = False   # guard (plans are DAGs; cheap insurance)
+        hit = any(c is site or reaches(c) for c in n.children)
+        if not hit:
+            for e in planner._node_exprs(n):
+                if any(s is site or reaches(s)
+                       for s in planner._expr_scalar_nodes(e)):
+                    hit = True
+                    break
+        memo[id(n)] = hit
+        return hit
+
+    return [n for n in planner.walk(root) if n is not site and reaches(n)]
+
+
+def _group_site_path_ok(consumers, site):
+    """True iff a GroupBy site's scaled estimates reach the root only through
+    non-computing nodes: projections (``Select``, key-only ``Rename``) and
+    ``Finalize``.  A ``Filter`` (SQL HAVING), join, ``WithCol``, or any
+    downstream aggregate would fold un-barred estimates into exact results —
+    group membership decided by a point estimate is not covered by its CI —
+    so such shapes refuse and run exact."""
+    agg_names = {name for name, _, _ in site.aggs}
+    for n in consumers:
+        if isinstance(n, (P.Select, P.Finalize)):
+            continue
+        if isinstance(n, P.Rename) and not (set(n.mapping) & agg_names):
+            continue
+        return False
+    return True
 
 
 def _strata_for(site, scan_table, chain, db):
@@ -246,11 +300,21 @@ def rewrite_for_rung(query, db, den, seed=sampling.DEFAULT_SEED,
     strata = _strata_for(site, scan_node.table, chain, db)
     if strata is None:
         return None
+    consumer_select_ids: set[int] = set()
+    moment_names: tuple = ()
     if den > 1:
+        if isinstance(site, P.GroupBy):
+            consumers = _estimate_consumers(root, site)
+            if not _group_site_path_ok(consumers, site):
+                return None
+            consumer_select_ids = {id(n) for n in consumers
+                                   if isinstance(n, P.Select)}
         rewritten = _rewrite_aggs(site.aggs)
         if rewritten is None:
             return None
         new_aggs, targets = rewritten
+        moment_names = tuple(n for n, _, _ in new_aggs
+                             if n.startswith(E.MOMENT_PREFIX))
     else:
         # rung 1 is the full table: keep the exact aggregate forms (and
         # dtypes) — byte-identity with the exact plan is a tested invariant
@@ -310,6 +374,12 @@ def rewrite_for_rung(query, db, den, seed=sampling.DEFAULT_SEED,
                 return node
             return P.Filter(kids[0], pred)
         if isinstance(node, P.Select):
+            if id(node) in consumer_select_ids and moment_names:
+                # a projection between the site and the root (SQL lowering
+                # emits one when the SELECT list reorders or drops GroupBy
+                # outputs) must keep the moment columns flowing to finalize
+                extra = tuple(c for c in moment_names if c not in node.names)
+                return P.Select(kids[0], tuple(node.names) + extra)
             return node if same_kids else P.Select(kids[0], node.names)
         if isinstance(node, P.WithCol):
             exprs = {k: _rebuild_expr(v, rebuild) for k, v in node.exprs.items()}

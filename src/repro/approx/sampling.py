@@ -139,11 +139,28 @@ def sample_table(table_cols, strata_names, den, seed=DEFAULT_SEED):
 _RUNGS: dict = {}  # (id(db), table, strata, den, seed) -> (weakref(db), rung_db)
 
 
+def _drop_rung_partition_keys(dead_keys) -> None:
+    """Unregister ``backend.PARTITION_KEYS`` entries for invalidated rungs.
+
+    A rung name may be shared by rungs of other live databases (same table
+    and den, different ``Database``); the entry stays until the last one is
+    evicted — the registered value is the base table's key either way."""
+    if not dead_keys:
+        return
+    from repro.core import backend as B
+    live = {rung_name(k[1], k[3]) for k in _RUNGS}
+    for k in dead_keys:
+        name = rung_name(k[1], k[3])
+        if name not in live:
+            B.PARTITION_KEYS.pop(name, None)
+
+
 def _invalidation_hook(db) -> None:
     dead = [k for k, (ref, _) in _RUNGS.items()
             if k[0] == id(db) or ref() is None]
     for k in dead:
         _RUNGS.pop(k, None)
+    _drop_rung_partition_keys(dead)
 
 
 planner.register_invalidation(_invalidation_hook)
@@ -152,7 +169,9 @@ planner.register_invalidation(_invalidation_hook)
 def invalidate(db=None) -> None:
     """Drop cached rungs for ``db`` (or all rungs when ``db`` is None)."""
     if db is None:
+        dead = list(_RUNGS)
         _RUNGS.clear()
+        _drop_rung_partition_keys(dead)
     else:
         _invalidation_hook(db)
 
@@ -179,6 +198,10 @@ def rung_database(db: Database, table: str, strata, den: int,
     samp = sample_table(db.tables[table], strata, den, seed)
     rdb = Database(tables={**db.tables, name: samp}, dicts=db.dicts,
                    scale=db.scale)
-    B.PARTITION_KEYS.setdefault(name, B.PARTITION_KEYS.get(table))
+    # only partitioned base tables register: an explicit name -> None entry
+    # would make dryrun analytics classify the rung as replicated
+    pkey = B.PARTITION_KEYS.get(table)
+    if pkey is not None:
+        B.PARTITION_KEYS.setdefault(name, pkey)
     _RUNGS[key] = (weakref.ref(db), rdb)
     return rdb

@@ -21,8 +21,11 @@ Layers:
     results are byte-identical to the exact plan on both planner legs and
     both wire formats (the differential leg).
   * **Refusal** — min/max, semi-join-dependent counts, estimates folded into
-    scalar arithmetic, tiny tables: the rewrite returns None and the
-    progressive runner falls back to the exact plan (rung 0).
+    scalar arithmetic, grouped estimates feeding a filter/join (q18, SQL
+    HAVING), tiny tables: the rewrite returns None and the progressive
+    runner falls back to the exact plan (rung 0).  A Select between the site
+    and the root keeps the moment columns flowing; finalize raises if a
+    scaled result ever arrives without them.
   * **Progressive** — hypothesis property: termination with a final interval
     within tolerance (or the exact top rung), escalations audited as
     TOLERANCE_MISS attempts; the adversarial absent-group case must climb to
@@ -140,6 +143,31 @@ def test_rung_database_cached_and_invalidated():
     sampling.invalidate(db2)
 
 
+def test_rung_partition_key_hygiene():
+    """An unpartitioned base table must not leave a name -> None mapping in
+    the global PARTITION_KEYS (dryrun analytics would read it as replicated),
+    and a registered rung entry is dropped with its invalidated rung."""
+    rng = np.random.default_rng(APPROX_SEED + 4)
+    db2 = Database(tables={"facts": {
+        "g": rng.integers(0, 5, 400).astype(np.int64),
+        "v": rng.normal(size=400)}}, dicts={}, scale=1.0)
+    name = sampling.rung_name("facts", 8)
+    try:
+        sampling.rung_database(db2, "facts", ("g",), 8)
+        assert name not in B.PARTITION_KEYS   # no explicit None entry
+        # a partitioned base registers its key, invalidation unregisters it
+        sampling.invalidate(db2)
+        B.PARTITION_KEYS["facts"] = "g"
+        sampling.rung_database(db2, "facts", ("g",), 8)
+        assert B.PARTITION_KEYS[name] == "g"
+        planner.invalidate_stats(db2)
+        assert name not in B.PARTITION_KEYS
+    finally:
+        B.PARTITION_KEYS.pop("facts", None)
+        B.PARTITION_KEYS.pop(name, None)
+        sampling.invalidate(db2)
+
+
 # ---------------------------------------------------------------------------
 # estimator unit behavior
 # ---------------------------------------------------------------------------
@@ -176,6 +204,27 @@ def test_non_estimable_ops_raise():
         estimators.interval("min", 10, 5, 5, 1.0, 1.0)
     with pytest.raises(ValueError):
         estimators.point_estimate("max", 10, 5, 5, 1.0)
+
+
+def test_finalize_raises_on_dropped_moments():
+    """The tolerance guarantee's last line of defense: a scale-rewritten
+    result whose __ap_* moments were projected away must raise, never be
+    served as an exact zero-width answer."""
+    with pytest.raises(ValueError, match="moment"):
+        estimators.finalize_result({"s": np.array([7.0])},
+                                   (("s", "sum"),), scaled=True)
+    # scaled target present but its own s1/s2 moments missing
+    with pytest.raises(ValueError, match="s1"):
+        estimators.finalize_result(
+            {"s": np.array([7.0]),
+             estimators.N_COL: np.array([16]),
+             estimators.M_COL: np.array([4]),
+             estimators.MF_COL: np.array([4])},
+            (("s", "sum"),), scaled=True)
+    # unscaled (rung-1 / refused) results still pass through exact
+    est = estimators.finalize_result({"s": np.array([7.0])},
+                                     (("s", "sum"),), scaled=False)
+    assert est.exact and est.rel_width == 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -383,6 +432,58 @@ def test_refuses_tiny_table():
                             min_rows=10) is not None
 
 
+def test_refuses_group_estimate_feeding_computation(db):
+    """A GroupBy site's scaled estimates may only reach the root through
+    projections and Finalize.  q18's grouped sum feeds a HAVING-style filter
+    and two joins — group membership decided by an un-barred estimate — so
+    every sampled rung refuses (rung 1 stays a pure rename, tested above)."""
+    for den in (16, 8, 4, 2):
+        assert rewrite_for_rung(QUERIES[18], db, den) is None
+    # synthetic minimal shape: Filter directly on the aggregate output
+    db2 = _synth_db()
+    q = planner.compile_query(lambda: scan("facts").group_by(
+        ["g"], [("s", "sum", "v")], exchange="gather", final=True)
+        .filter(col("s") > 0.0).finalize(replicated=True), name="having")
+    assert rewrite_for_rung(q, db2, 4, tables=("facts",)) is None
+    # SQL HAVING lowers to exactly that Filter
+    from repro.sql import compile_sql
+    qs = compile_sql("SELECT l_returnflag, sum(l_quantity) AS sq "
+                     "FROM lineitem GROUP BY l_returnflag "
+                     "HAVING sum(l_quantity) > 100", name="having_sql")
+    assert rewrite_for_rung(qs, db, 4) is None
+
+
+def test_select_above_site_keeps_moments(db):
+    """SQL lowering emits a Select above the GroupBy whenever the SELECT
+    list reorders or omits outputs (lower.py); the rewrite must extend that
+    projection so the moment columns reach finalize — this was the silent
+    width-0.0 bug: a den=16 HT estimate served as exact."""
+    from repro.sql import compile_sql
+    q = compile_sql("SELECT sum(l_quantity) AS sq, l_returnflag "
+                    "FROM lineitem GROUP BY l_returnflag "
+                    "ORDER BY l_returnflag", name="reorder")
+    for den in (16, 4):
+        rw = rewrite_for_rung(q, db, den)
+        assert rw is not None
+        cols, _ = B.run_reference(rw.query, rw.db)
+        assert estimators.N_COL in cols        # moments survived the Select
+        est = rw.finalize(cols)
+        assert 0.0 < est.rel_width < np.inf    # honest bars, not fake-exact
+        assert estimators.N_COL not in est.result
+    # plan-level: the projection may also drop a target — it is then simply
+    # not served, while the surviving target keeps its bars
+    db2 = _synth_db(rows=2048)
+    qp = planner.compile_query(lambda: scan("facts").group_by(
+        ["g"], [("s", "sum", "v"), ("c", "count", None)],
+        exchange="gather", final=True).select("s", "g")
+        .finalize(sort_keys=[("g", True)], replicated=True), name="proj")
+    rw = rewrite_for_rung(qp, db2, 4, tables=("facts",))
+    cols, _ = B.run_reference(rw.query, rw.db)
+    est = rw.finalize(cols)
+    assert "c" not in est.result and "s" in est.half_width
+    assert est.rel_width > 0.0
+
+
 def test_refuses_estimate_in_scalar_arithmetic():
     """A scalar estimate folded into arithmetic has no attachable bar."""
     db2 = _synth_db()
@@ -392,6 +493,16 @@ def test_refuses_estimate_in_scalar_arithmetic():
         lambda: P.ScalarResult({"ratio": P.ScalarRef(agg, "s") /
                                 P.ScalarRef(agg, "c")}), name="ratio")
     assert rewrite_for_rung(q, db2, 4, tables=("facts",)) is None
+
+
+def test_progressive_rejects_off_ladder_rung(db):
+    """A custom ladder with a denominator the sampler has no rung for must
+    fail at construction, not blow up mid-run()."""
+    with pytest.raises(ValueError, match="sampling ladder"):
+        progressive.ProgressiveRunner(db, ladder=(32, 16, 1))
+    # valid subsets of the sampling ladder are still accepted
+    r = progressive.ProgressiveRunner(db, ladder=(16, 4, 1))
+    assert r.ladder == (16, 4, 1)
 
 
 def test_progressive_exact_fallback(db):
